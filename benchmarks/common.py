@@ -1,0 +1,47 @@
+"""Shared benchmark harness: timing, CSV emission, profile selection."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+           per: int = 1) -> float:
+    """Median wall time per logical operation, in microseconds.
+
+    `per` = number of logical ops one call performs (batched compares).
+    Blocks on device results so jit dispatch isn't under-counted.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args)) if _is_jax(fn(*args)) else fn(*args)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        if _is_jax(out):
+            jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    med = sorted(times)[len(times) // 2]
+    return med / per * 1e6
+
+
+def _is_jax(x) -> bool:
+    try:
+        jax.tree.leaves(x)
+        return any(hasattr(l, "block_until_ready")
+                   for l in jax.tree.leaves(x))
+    except Exception:
+        return False
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def header() -> None:
+    print("name,us_per_call,derived")

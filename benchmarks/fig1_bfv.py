@@ -1,0 +1,67 @@
+"""Paper Figure 1: HADES Basic vs FA-Extension micro-benchmarks, BFV.
+
+KeyGen / EncBasic / EncFAE / CmpBasic / CmpFAE over 100 uniform values in
+[0, 1e6) (preprocessed mod t=65537, §6.2.1).  The paper's qualitative
+claims validated here (EXPERIMENTS.md §Paper-claims):
+  * FAE encryption costs ~2-3x Basic (perturbation + extra noise path)
+  * comparison is cheaper than encryption
+  * FAE comparison ~= Basic comparison
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+
+N_VALUES = 100
+
+
+def run(profile: str = "bench-bfv", mode: str = "gadget",
+        tag: str = "fig1.bfv") -> None:
+    params = make_params(profile, mode=mode)
+    key = jax.random.PRNGKey(0)
+    vals = np.random.default_rng(7).integers(0, 10**6, N_VALUES) % params.t
+    m = jnp.asarray(vals, jnp.int64)
+
+    kg = lambda: keygen(params, jax.random.PRNGKey(1))
+    emit(f"{tag}.keygen", timeit(lambda: kg().pk0, iters=3),
+         f"profile={profile};mode={mode}")
+
+    ks = keygen(params, jax.random.PRNGKey(1))
+    enc_b = jax.jit(lambda mm, kk: E.encrypt(ks, mm, kk))
+    enc_f = jax.jit(lambda mm, kk: E.encrypt_fae(ks, mm, kk))
+    emit(f"{tag}.enc_basic", timeit(enc_b, m, key, per=N_VALUES),
+         f"n={params.n};towers={params.num_towers}")
+    emit(f"{tag}.enc_fae", timeit(enc_f, m, key, per=N_VALUES), "")
+
+    ct_a = enc_b(m, jax.random.PRNGKey(2))
+    ct_b = enc_b(jnp.roll(m, 1), jax.random.PRNGKey(3))
+    ctf_a = enc_f(m, jax.random.PRNGKey(4))
+    ctf_b = enc_f(jnp.roll(m, 1), jax.random.PRNGKey(5))
+    cmp_b = jax.jit(lambda a, b: C.compare(ks, a, b))
+    cmp_f = jax.jit(lambda a, b: C.compare_fae(ks, a, b))
+    emit(f"{tag}.cmp_basic", timeit(cmp_b, ct_a, ct_b, per=N_VALUES), "")
+    emit(f"{tag}.cmp_fae", timeit(cmp_f, ctf_a, ctf_b, per=N_VALUES), "")
+
+    # paper-faithful CEK mode (single-poly cek, 1 NTT-mul per compare) —
+    # this is the variant the paper's "comparison cheaper than encryption"
+    # claim is about; the gadget mode above pays K*D muls for the F1 fix.
+    if mode != "paper":
+        pparams = make_params(profile, mode="paper")
+        pks = keygen(pparams, jax.random.PRNGKey(1), paper_ecek_weight=0)
+        pct_a = E.encrypt(pks, m, jax.random.PRNGKey(2))
+        pct_b = E.encrypt(pks, jnp.roll(m, 1), jax.random.PRNGKey(3))
+        cmp_p = jax.jit(lambda a, b: C.compare(pks, a, b))
+        emit(f"{tag}.cmp_paper_mode",
+             timeit(cmp_p, pct_a, pct_b, per=N_VALUES),
+             "paper-faithful single-poly CEK")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Figure 2: HADES micro-benchmarks on the CKKS (float) profile.
+
+Paper claim validated: CKKS ops cost ~2-3x their BFV counterparts (bigger
+ring / float encode), while supporting floating-point operands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+
+N_VALUES = 100
+
+
+def run(profile: str = "test-ckks", mode: str = "gadget",
+        tag: str = "fig2.ckks") -> None:
+    params = make_params(profile, mode=mode)
+    key = jax.random.PRNGKey(0)
+    vals = np.random.default_rng(8).uniform(0, 1e6, N_VALUES)
+    m = jnp.asarray(vals, jnp.float64)
+
+    ks = keygen(params, jax.random.PRNGKey(1))
+    emit(f"{tag}.keygen",
+         timeit(lambda: keygen(params, jax.random.PRNGKey(1)).pk0, iters=2),
+         f"profile={profile};n={params.n}")
+    enc_b = jax.jit(lambda mm, kk: E.encrypt(ks, mm, kk))
+    enc_f = jax.jit(lambda mm, kk: E.encrypt_fae(ks, mm, kk))
+    emit(f"{tag}.enc_basic", timeit(enc_b, m, key, per=N_VALUES), "float64")
+    emit(f"{tag}.enc_fae", timeit(enc_f, m, key, per=N_VALUES), "")
+
+    ct_a = enc_b(m, jax.random.PRNGKey(2))
+    ct_b = enc_b(jnp.roll(m, 1), jax.random.PRNGKey(3))
+    cmp_b = jax.jit(lambda a, b: C.compare(ks, a, b))
+    cmp_f = jax.jit(lambda a, b: C.compare_fae(ks, a, b))
+    emit(f"{tag}.cmp_basic", timeit(cmp_b, ct_a, ct_b, per=N_VALUES), "")
+    emit(f"{tag}.cmp_fae", timeit(cmp_f, ct_a, ct_b, per=N_VALUES), "")
+
+
+if __name__ == "__main__":
+    run()

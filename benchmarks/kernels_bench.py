@@ -1,0 +1,44 @@
+"""Kernel-level benchmarks: Pallas fused compare vs reference pipeline.
+
+On CPU both run interpreted/XLA so wall-clock is not the TPU story — the
+`derived` column carries the structural win instead: HBM bytes moved per
+comparison (the fused kernel emits K residues instead of a full [2,K,n]
+eval polynomial), which is the §Perf memory-term claim.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+from repro.kernels import ops
+
+N = 32
+
+
+def run(tag: str = "kernels", profile: str = "test-bfv") -> None:
+    for mode in ("paper", "gadget"):
+        params = make_params(profile, mode=mode)
+        ks = keygen(params, jax.random.PRNGKey(1),
+                    paper_ecek_weight=0 if mode == "paper" else None)
+        m = jnp.arange(N, dtype=jnp.int64)
+        ct_a = E.encrypt(ks, m, jax.random.PRNGKey(2))
+        ct_b = E.encrypt(ks, jnp.roll(m, 1), jax.random.PRNGKey(3))
+        ref = jax.jit(lambda a, b: C.compare(ks, a, b))
+        emit(f"{tag}.{mode}.ref_compare", timeit(ref, ct_a, ct_b, per=N), "")
+        emit(f"{tag}.{mode}.pallas_compare",
+             timeit(lambda a, b: ops.compare(ks, a, b), ct_a, ct_b, per=N),
+             "interpret-mode (CPU)")
+        n, K = params.n, params.num_towers
+        naive_out = 2 * K * n * 8
+        fused_out = K * 8
+        emit(f"{tag}.{mode}.out_bytes_ratio", naive_out / fused_out,
+             f"naive={naive_out}B fused={fused_out}B per compare")
+
+
+if __name__ == "__main__":
+    run()

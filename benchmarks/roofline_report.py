@@ -1,0 +1,31 @@
+"""Assemble the §Roofline table from artifacts/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+
+def run(tag: str = "roofline", art_dir: str = "artifacts/dryrun") -> None:
+    files = sorted(glob.glob(os.path.join(art_dir, "*.json")))
+    if not files:
+        emit(f"{tag}.missing", 0.0, "run repro.launch.dryrun --all first")
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        cell = f"{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec["status"] != "ok":
+            emit(f"{tag}.{cell}", 0.0, f"status={rec['status']}")
+            continue
+        r = rec["roofline"]
+        emit(f"{tag}.{cell}", r["step_time_s"] * 1e6,
+             f"dom={r['dominant']};frac={r['roofline_fraction']};"
+             f"useful={r['useful_ratio']};mem_gib="
+             f"{rec['memory']['peak_per_device_gib']}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Figures map 1:1 to the paper:
+  fig1  BFV micro-benchmarks (KeyGen/Enc{Basic,FAE}/Cmp{Basic,FAE})
+  fig2  CKKS micro-benchmarks
+  fig3  real-world datasets (Bitcoin / Covid19 / hg38)
+  fig4  protocol comparison (HADES vs HOPE vs POPE)
+  table1  feature matrix (+ mechanical interaction checks)
+plus two framework benches: kernels (Pallas fused compare) and roofline
+(the dry-run derived table).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import common
+
+
+def main() -> None:
+    common.header()
+    from benchmarks import (fig1_bfv, fig2_ckks, fig3_datasets,
+                            fig4_baselines, kernels_bench, roofline_report,
+                            table1_features)
+    suites = [
+        ("fig1", fig1_bfv.run),
+        ("fig2", fig2_ckks.run),
+        ("fig3", fig3_datasets.run),
+        ("fig4", fig4_baselines.run),
+        ("table1", table1_features.run),
+        ("kernels", kernels_bench.run),
+        ("roofline", roofline_report.run),
+    ]
+    failed = []
+    for name, fn in suites:
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+            common.emit(f"{name}.FAILED", -1.0, "see stderr")
+    if failed:
+        print(f"# FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

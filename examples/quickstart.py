@@ -1,0 +1,49 @@
+"""Quickstart: HADES keygen -> encrypt -> compare, both modes, 2 minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+from repro.core import noise
+
+
+def main():
+    # --- gadget mode (correct + secure; DESIGN.md §1.1) ----------------
+    params = make_params("test-bfv", mode="gadget")
+    print(f"ring n={params.n}, towers={params.qs}, scale={params.scale}, "
+          f"max comparable |diff|={params.max_operand}")
+    budget = noise.predict(params)
+    print(f"noise headroom: {budget.headroom_bits:.1f} bits "
+          f"(tau={budget.tau}, 6σ={6*budget.eval_sigma:.0f})")
+
+    ks = keygen(params, jax.random.PRNGKey(0))
+    a = jnp.asarray([42, 7, 100, -5])
+    b = jnp.asarray([7, 42, 100, 5])
+    ct_a = E.encrypt(ks, a, jax.random.PRNGKey(1))
+    ct_b = E.encrypt(ks, b, jax.random.PRNGKey(2))
+    print("decrypt roundtrip:", E.decrypt(ks, ct_a))
+    print("compare(a, b)    :", C.compare(ks, ct_a, ct_b),
+          " (expected [1, -1, 0, -1])")
+
+    # --- FA-Extension: equality is obfuscated ---------------------------
+    eq = jnp.full((8,), 99)
+    ct1 = E.encrypt_fae(ks, eq, jax.random.PRNGKey(3))
+    ct2 = E.encrypt_fae(ks, eq, jax.random.PRNGKey(4))
+    flips = C.compare_fae(ks, ct1, ct2)
+    print("FAE compare of equal values (coin flips):", flips)
+
+    # --- paper-literal mode ---------------------------------------------
+    p2 = make_params("test-bfv", mode="paper")
+    ks2 = keygen(p2, jax.random.PRNGKey(0), paper_ecek_weight=0)
+    ct_a2 = E.encrypt(ks2, a, jax.random.PRNGKey(1))
+    ct_b2 = E.encrypt(ks2, b, jax.random.PRNGKey(2))
+    print("paper-mode compare:", C.compare(ks2, ct_a2, ct_b2))
+
+
+if __name__ == "__main__":
+    main()

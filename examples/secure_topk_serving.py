@@ -1,0 +1,59 @@
+"""HADES x LM serving: encrypted top-k over model scores (DESIGN.md §2.1).
+
+An outsourced LM server produces candidate scores (here: last-token logits
+of a smollm-family model over a candidate set).  The score owner encrypts
+them; the DB layer picks the top-k WITHOUT learning the scores, via HADES
+comparisons.  This is the paper's database perspective applied at the
+serving boundary.
+
+    PYTHONPATH=src python examples/secure_topk_serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.ckks import equality_tolerance
+from repro.core.keys import keygen
+from repro.core.params import make_params
+from repro.models import serve as SV
+from repro.models import transformer as T
+
+
+def main():
+    # --- 1. the LM produces scores --------------------------------------
+    cfg = configs.get_reduced("smollm_360m")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 16
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S),
+                                          0, cfg.vocab_size)}
+    logits, _ = SV.prefill(cfg, params, batch)
+
+    n_cand = 16
+    cand = jax.random.choice(jax.random.PRNGKey(2),
+                             cfg.vocab_size, (n_cand,), replace=False)
+    scores = logits[0, cand]                       # [n_cand] float scores
+    print("candidate scores:", np.round(np.asarray(scores), 2))
+
+    # --- 2. client encrypts scores (CKKS profile: floats) ---------------
+    hp = make_params("test-ckks", mode="gadget")
+    ks = keygen(hp, jax.random.PRNGKey(3))
+    tol = equality_tolerance(hp)
+    enc_scores = E.encrypt(ks, scores.astype(jnp.float64),
+                           jax.random.PRNGKey(4))
+
+    # --- 3. server-side encrypted top-k ---------------------------------
+    k = 4
+    _, top_idx = C.encrypted_topk(ks, enc_scores, k)
+    picked = np.asarray(cand)[np.asarray(top_idx)]
+    exact = np.asarray(cand)[np.argsort(np.asarray(scores))[-k:]]
+    print(f"encrypted top-{k} tokens: {sorted(picked.tolist())}")
+    print(f"plaintext top-{k} tokens: {sorted(exact.tolist())}")
+    print(f"(CKKS equality tolerance: |Δscore| < {tol:.3g} "
+          f"counts as a tie and may reorder)")
+
+
+if __name__ == "__main__":
+    main()

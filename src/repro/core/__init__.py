@@ -1,0 +1,30 @@
+"""HADES core: RLWE-based homomorphic symbol comparison (the paper's contribution).
+
+Everything in this package operates on int64 coefficient arrays in RNS
+(residue-number-system) representation; 64-bit mode is required for exact
+modular arithmetic on CPU/TPU-interpret backends.
+"""
+import jax
+
+# Exact mod-q arithmetic needs 64-bit integers. Model code pins its own
+# dtypes explicitly, so enabling x64 here is safe for the whole package.
+jax.config.update("jax_enable_x64", True)
+
+# NOTE: functions named like their submodule (encrypt.encrypt,
+# compare.compare) are deliberately NOT re-exported — rebinding them here
+# would shadow the submodules for `import repro.core.encrypt` users.
+from repro.core.params import HadesParams, Profile, make_params  # noqa: E402,F401
+from repro.core.keys import KeySet, keygen  # noqa: E402,F401
+from repro.core.encrypt import (  # noqa: E402,F401
+    Ciphertext,
+    encrypt_fae,
+    decrypt,
+    decrypt_raw,
+)
+from repro.core.compare import (  # noqa: E402,F401
+    compare_many,
+    compare_fae,
+    range_query,
+    encrypted_sort,
+    encrypted_topk,
+)

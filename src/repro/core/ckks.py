@@ -1,0 +1,28 @@
+"""CKKS-profile helpers (paper §6.1: floating-point operands).
+
+The compare pipeline is scheme-agnostic once operands are fixed-point
+encoded; this module provides the float encode/decode contract and the
+approximate-equality threshold used by Alg. 2's τ in the CKKS profile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.params import HadesParams
+
+
+def encode(params: HadesParams, x: jax.Array) -> jax.Array:
+    """Real -> fixed-point payload units (what encrypt._payload does)."""
+    return jnp.round(jnp.asarray(x, jnp.float64) * params.delta_enc
+                     ).astype(jnp.int64)
+
+
+def decode(params: HadesParams, v: jax.Array) -> jax.Array:
+    return v.astype(jnp.float64) / params.delta_enc
+
+
+def equality_tolerance(params: HadesParams) -> float:
+    """Smallest |x0 - x1| the CKKS profile can distinguish from equality:
+    below this, Alg. 2 returns 0 (approximate equality) by design."""
+    return params.tau / (params.scale * params.delta_enc)

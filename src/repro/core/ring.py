@@ -1,0 +1,223 @@
+"""R_q = Z_q[x]/(x^n + 1) arithmetic in RNS form, pure JAX.
+
+Polynomials are int64 arrays of shape [..., K, n] (K = number of RNS towers),
+with residues kept in [0, q_k).  All products of two residues fit a signed
+int64 (q_k < 2^31), so `%` gives exact modular arithmetic on CPU and in
+Pallas interpret mode.  This module is also the *reference oracle* for the
+Pallas NTT kernels (kernels/ref.py re-exports it).
+
+The NTT is the standard negacyclic transform: pre-twist by psi^i, DIT
+Cooley-Tukey forward, Gentleman-Sande inverse, post-twist by psi^-i * n^-1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.params import HadesParams, NttTables
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Ring:
+    """Device-side ring context. Static metadata + jnp twiddle tables.
+
+    Registered as a pytree (qs/n static) so jit'd kernels can close over it
+    or take it as an argument.
+    """
+
+    qs: Tuple[int, ...] = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+    q_arr: jax.Array = None          # [K, 1] int64
+    psi_pow: jax.Array = None        # [K, n]
+    psi_inv_pow: jax.Array = None    # [K, n]
+    stage_w: jax.Array = None        # [K, S, n/2]
+    stage_w_inv: jax.Array = None    # [K, S, n/2]
+    bitrev: jax.Array = None         # [n]
+
+    @property
+    def num_towers(self) -> int:
+        return len(self.qs)
+
+    @property
+    def stages(self) -> int:
+        return self.n.bit_length() - 1
+
+
+def make_ring(params: HadesParams) -> Ring:
+    t: NttTables = params.ntt_tables()
+    return Ring(
+        qs=tuple(params.qs),
+        n=params.n,
+        q_arr=jnp.asarray(np.asarray(params.qs, dtype=np.int64)[:, None]),
+        psi_pow=jnp.asarray(t.psi_pow),
+        psi_inv_pow=jnp.asarray(t.psi_inv_pow),
+        stage_w=jnp.asarray(t.stage_w),
+        stage_w_inv=jnp.asarray(t.stage_w_inv),
+        bitrev=jnp.asarray(t.bitrev),
+    )
+
+
+# ---------------------------------------------------------------------------
+# elementwise ring ops
+# ---------------------------------------------------------------------------
+
+def add(ring: Ring, a: jax.Array, b: jax.Array) -> jax.Array:
+    return (a + b) % ring.q_arr
+
+
+def sub(ring: Ring, a: jax.Array, b: jax.Array) -> jax.Array:
+    return (a - b) % ring.q_arr
+
+
+def neg(ring: Ring, a: jax.Array) -> jax.Array:
+    return (-a) % ring.q_arr
+
+
+def scalar_mul(ring: Ring, a: jax.Array, s: jax.Array | int) -> jax.Array:
+    """a * s mod q, s an int64 scalar already reduced below 2^31."""
+    return (a * jnp.int64(s)) % ring.q_arr
+
+
+def pointwise_mul(ring: Ring, a: jax.Array, b: jax.Array) -> jax.Array:
+    return (a * b) % ring.q_arr
+
+
+# ---------------------------------------------------------------------------
+# NTT (pure-jnp reference implementation)
+# ---------------------------------------------------------------------------
+
+def _dit_stages(a: jax.Array, stage_w: jax.Array, q: jax.Array,
+                n: int) -> jax.Array:
+    """Forward DIT butterflies on bit-reversed input. a: [..., K, n]."""
+    stages = n.bit_length() - 1
+    for s in range(stages):
+        h = 1 << s
+        m = h * 2
+        w = stage_w[:, s, :h]                      # [K, h]
+        x = a.reshape(a.shape[:-1] + (n // m, m))
+        u = x[..., :h]                             # [..., K, n/m, h]
+        v = x[..., h:]
+        t = (v * w[:, None, :]) % q[..., None]
+        a = jnp.concatenate([(u + t) % q[..., None],
+                             (u - t) % q[..., None]], axis=-1)
+        a = a.reshape(a.shape[:-2] + (n,))
+    return a
+
+
+def _gs_stages(a: jax.Array, stage_w_inv: jax.Array, q: jax.Array,
+               n: int) -> jax.Array:
+    """Inverse Gentleman-Sande butterflies, natural-order input."""
+    stages = n.bit_length() - 1
+    for s in reversed(range(stages)):
+        h = 1 << s
+        m = h * 2
+        w = stage_w_inv[:, s, :h]
+        x = a.reshape(a.shape[:-1] + (n // m, m))
+        u = x[..., :h]
+        v = x[..., h:]
+        a = jnp.concatenate([(u + v) % q[..., None],
+                             ((u - v) * w[:, None, :]) % q[..., None]],
+                            axis=-1)
+        a = a.reshape(a.shape[:-2] + (n,))
+    return a
+
+
+def ntt(ring: Ring, a: jax.Array) -> jax.Array:
+    """Negacyclic forward NTT. a: [..., K, n] -> [..., K, n] (eval domain)."""
+    q = ring.q_arr  # [K, 1]
+    a = (a * ring.psi_pow) % q            # pre-twist
+    a = jnp.take(a, ring.bitrev, axis=-1)
+    return _dit_stages(a, ring.stage_w, q, ring.n)
+
+
+def intt(ring: Ring, a: jax.Array) -> jax.Array:
+    """Negacyclic inverse NTT (includes n^-1 scaling)."""
+    q = ring.q_arr
+    a = _gs_stages(a, ring.stage_w_inv, q, ring.n)
+    a = jnp.take(a, ring.bitrev, axis=-1)
+    return (a * ring.psi_inv_pow) % q     # post-twist * n^-1
+
+
+def negacyclic_mul(ring: Ring, a: jax.Array, b: jax.Array) -> jax.Array:
+    """a * b in R_q via NTT."""
+    return intt(ring, pointwise_mul(ring, ntt(ring, a), ntt(ring, b)))
+
+
+def naive_negacyclic_mul(ring: Ring, a: jax.Array, b: jax.Array) -> jax.Array:
+    """O(n^2) schoolbook negacyclic product — oracle for the NTT itself.
+
+    Only for tests with small n. a, b: [K, n].
+    """
+    n = ring.n
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    k = (i + j) % n
+    sign = jnp.where(i + j >= n, -1, 1).astype(jnp.int64)
+    # out[k] = sum_{i+j = k mod n} sign * a[i]*b[j]; accumulate per tower
+    # with mod after each outer-product row to stay inside int64.
+    def tower(a_k, b_k, q):
+        prod = (a_k[:, None] * b_k[None, :]) % q          # [n, n]
+        contrib = (sign * prod) % q
+        out = jnp.zeros((n,), jnp.int64)
+        flat_k = k.reshape(-1)
+        out = out.at[flat_k].add(contrib.reshape(-1) % q)
+        return out % q
+    outs = [tower(a[t], b[t], ring.qs[t]) for t in range(ring.num_towers)]
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# CRT decode (centered representative of a coefficient mod Q)
+# ---------------------------------------------------------------------------
+
+def _mulmod(a: jax.Array, b_int: int, m_int: int) -> jax.Array:
+    """(a * b) mod m with m up to 2^62, via double-and-add. a: any shape."""
+    acc = jnp.zeros_like(a)
+    cur = a % m_int
+    b = b_int % m_int
+    while b:
+        if b & 1:
+            acc = (acc + cur) % m_int
+        cur = (cur * 2) % m_int
+        b >>= 1
+    return acc
+
+
+def crt_centered(params: HadesParams, residues: jax.Array) -> jax.Array:
+    """Reconstruct centered value in (-Q/2, Q/2] from residues [..., K].
+
+    Exact for Q < 2^62 (int64 double-and-add; the Python loop over bits is
+    unrolled at trace time, b is a static host integer).
+    """
+    Q = params.Q
+    alphas = params.crt_alphas()
+    acc = jnp.zeros(residues.shape[:-1], dtype=jnp.int64)
+    for k, alpha in enumerate(alphas):
+        acc = (acc + _mulmod(residues[..., k], alpha, Q)) % Q
+    # center
+    return jnp.where(acc > Q // 2, acc - Q, acc)
+
+
+def to_rns(params: HadesParams, coeffs: np.ndarray) -> np.ndarray:
+    """Host helper: integer coefficient array [..., n] -> residues [..., K, n]."""
+    coeffs = np.asarray(coeffs, dtype=object)
+    out = np.stack([np.asarray(coeffs % q, dtype=np.int64)
+                    for q in params.qs], axis=-2)
+    return out
+
+
+def const_poly(params: HadesParams, value: jax.Array) -> jax.Array:
+    """Embed integer scalar(s) as the constant coefficient of an RNS poly.
+
+    value: [...] int64 (may be negative) -> [..., K, n].
+    """
+    K, n = params.num_towers, params.n
+    qs = jnp.asarray(np.asarray(params.qs, dtype=np.int64))  # [K]
+    res = value[..., None] % qs                              # [..., K]
+    zeros = jnp.zeros(value.shape + (K, n), dtype=jnp.int64)
+    return zeros.at[..., 0].set(res)

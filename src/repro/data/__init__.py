@@ -1,0 +1,2 @@
+"""Datasets for the paper's evaluation (§6.2.1) + LM token pipelines."""
+from repro.data.datasets import load_dataset, DATASETS  # noqa: F401

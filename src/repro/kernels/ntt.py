@@ -1,0 +1,157 @@
+"""Pallas negacyclic-NTT kernels (TPU target, validated interpret=True).
+
+TPU adaptation of the paper's OpenFHE CPU hot spot (DESIGN.md §3):
+
+* A whole ciphertext block stays **VMEM-resident across all log2(n) butterfly
+  stages** — one HBM round-trip per polynomial instead of one per stage.
+  n = 4096 coeffs x 8 B = 32 KiB/poly; a (8, n) block + twiddles is ~0.5 MiB,
+  far under the ~16 MiB VMEM budget.
+* **No bit-reversal gathers anywhere**: the forward transform is
+  decimation-in-frequency (natural -> bit-reversed "br-eval" order) and the
+  inverse is decimation-in-time (br-eval -> natural). Pointwise products are
+  order-agnostic, so the convolution pipeline never permutes. Gathers are the
+  one op class that maps badly onto the TPU vector unit; reshapes/rolls here
+  are lane-local.
+* Modular arithmetic: residues < 2^31 so a*b fits int64; `%` is exact in
+  interpret mode. Production-TPU note: int64 lowers to 32-bit pairs on TPU —
+  the drop-in fix is 16-bit limb decomposition with int32 MACs (jaxite-style),
+  which changes only the in-kernel `_mulmod` below, not the schedule.
+
+Layout: polys are [B, K, n] (batch, RNS towers, coeffs). Grid = (B/bb, K);
+each program transforms a (bb, n) tile for one tower.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import ring as R
+
+DEFAULT_BLOCK_B = 8
+
+
+def _fwd_stages(x, stage_w, q, n):
+    """DIF butterflies: natural order in -> br-eval order out. x: [bb, n]."""
+    stages = n.bit_length() - 1
+    for s in reversed(range(stages)):
+        h = 1 << s
+        m = 2 * h
+        w = stage_w[s, :h]                       # [h]
+        xr = x.reshape(-1, n // m, m)
+        u, v = xr[..., :h], xr[..., h:]
+        x = jnp.concatenate(
+            [(u + v) % q, ((u - v) * w) % q], axis=-1).reshape(-1, n)
+    return x
+
+
+def _inv_stages(x, stage_w_inv, q, n):
+    """DIT butterflies: br-eval order in -> natural order out."""
+    stages = n.bit_length() - 1
+    for s in range(stages):
+        h = 1 << s
+        m = 2 * h
+        w = stage_w_inv[s, :h]
+        xr = x.reshape(-1, n // m, m)
+        u, v = xr[..., :h], xr[..., h:]
+        t = (v * w) % q
+        x = jnp.concatenate([(u + t) % q, (u - t) % q], axis=-1).reshape(-1, n)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# kernels
+# ---------------------------------------------------------------------------
+
+def _ntt_kernel(x_ref, psi_ref, w_ref, q_ref, o_ref, *, n):
+    q = q_ref[0]
+    x = x_ref[:, 0, :]                            # [bb, n]
+    x = (x * psi_ref[0]) % q                      # negacyclic pre-twist
+    o_ref[:, 0, :] = _fwd_stages(x, w_ref[0], q, n)
+
+
+def _intt_kernel(x_ref, psi_inv_ref, w_ref, q_ref, o_ref, *, n):
+    q = q_ref[0]
+    x = _inv_stages(x_ref[:, 0, :], w_ref[0], q, n)
+    o_ref[:, 0, :] = (x * psi_inv_ref[0]) % q     # post-twist (n^-1 folded)
+
+
+def _mul_kernel(a_ref, b_ref, psi_ref, psi_inv_ref, wf_ref, wi_ref, q_ref,
+                o_ref, *, n):
+    """Fused negacyclic multiply: twist -> DIF -> pointwise -> DIT -> twist.
+
+    One kernel, one HBM round trip for a and b; zero gathers.
+    """
+    q = q_ref[0]
+    a = (a_ref[:, 0, :] * psi_ref[0]) % q
+    b = (b_ref[:, 0, :] * psi_ref[0]) % q
+    a = _fwd_stages(a, wf_ref[0], q, n)
+    b = _fwd_stages(b, wf_ref[0], q, n)
+    prod = (a * b) % q
+    out = _inv_stages(prod, wi_ref[0], q, n)
+    o_ref[:, 0, :] = (out * psi_inv_ref[0]) % q
+
+
+# ---------------------------------------------------------------------------
+# pallas_call wrappers (shape plumbing only; public API in ops.py)
+# ---------------------------------------------------------------------------
+
+def _specs(bb: int, n: int, stages: int):
+    """Common BlockSpecs: x-like [B,K,n], tables [K,...], q [K]."""
+    x_spec = pl.BlockSpec((bb, 1, n), lambda i, k: (i, k, 0))
+    psi_spec = pl.BlockSpec((1, n), lambda i, k: (k, 0))
+    w_spec = pl.BlockSpec((1, stages, n // 2), lambda i, k: (k, 0, 0))
+    q_spec = pl.BlockSpec((1,), lambda i, k: (k,))
+    return x_spec, psi_spec, w_spec, q_spec
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret", "fwd"))
+def ntt_br(x: jax.Array, ring: R.Ring, *, fwd: bool = True,
+           block_b: int = DEFAULT_BLOCK_B, interpret: bool = True):
+    """Forward (natural->br-eval) or inverse (br-eval->natural) NTT.
+
+    x: [B, K, n] int64.  B must be a multiple of block_b (ops.py pads).
+    """
+    Bb, K, n = x.shape
+    stages = n.bit_length() - 1
+    bb = min(block_b, Bb)
+    grid = (Bb // bb, K)
+    x_spec, psi_spec, w_spec, q_spec = _specs(bb, n, stages)
+    qs = ring.q_arr[:, 0]
+    if fwd:
+        kern = functools.partial(_ntt_kernel, n=n)
+        tables = (ring.psi_pow, ring.stage_w, qs)
+    else:
+        kern = functools.partial(_intt_kernel, n=n)
+        tables = (ring.psi_inv_pow, ring.stage_w_inv, qs)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[x_spec, psi_spec, w_spec, q_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x, *tables)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def negacyclic_mul(a: jax.Array, b: jax.Array, ring: R.Ring, *,
+                   block_b: int = DEFAULT_BLOCK_B, interpret: bool = True):
+    """Fused a ⊛ b over [B, K, n] batches."""
+    Bb, K, n = a.shape
+    stages = n.bit_length() - 1
+    bb = min(block_b, Bb)
+    grid = (Bb // bb, K)
+    x_spec, psi_spec, w_spec, q_spec = _specs(bb, n, stages)
+    qs = ring.q_arr[:, 0]
+    return pl.pallas_call(
+        functools.partial(_mul_kernel, n=n),
+        grid=grid,
+        in_specs=[x_spec, x_spec, psi_spec, psi_spec, w_spec, w_spec, q_spec],
+        out_specs=x_spec,
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b, ring.psi_pow, ring.psi_inv_pow, ring.stage_w, ring.stage_w_inv,
+      qs)

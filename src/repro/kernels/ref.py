@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert exact equality —
+modular integer arithmetic admits no tolerance)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gadget as G
+from repro.core import ring as R
+from repro.core.keys import KeySet
+
+
+def ntt_br(x: jax.Array, ring: R.Ring, *, fwd: bool = True) -> jax.Array:
+    """Oracle for kernels.ntt.ntt_br: DIF order == bitrev-permuted DIT NTT."""
+    if fwd:
+        return jnp.take(R.ntt(ring, x), ring.bitrev, axis=-1)
+    return R.intt(ring, jnp.take(x, ring.bitrev, axis=-1))
+
+
+def negacyclic_mul(a: jax.Array, b: jax.Array, ring: R.Ring) -> jax.Array:
+    return R.negacyclic_mul(ring, a, b)
+
+
+def eval_coeff0_paper(d0: jax.Array, d1: jax.Array, ks: KeySet,
+                      scale: int) -> jax.Array:
+    rng = ks.ring
+    keyed = R.negacyclic_mul(rng, d1, ks.cek)
+    ev = (d0 * jnp.int64(scale) + keyed) % rng.q_arr
+    return ev[..., :, 0]
+
+
+def eval_coeff0_gadget(d0: jax.Array, d1: jax.Array, ks: KeySet,
+                       scale: int) -> jax.Array:
+    rng = ks.ring
+    keyed = G.gadget_keymul(ks, d1)
+    ev = (d0 * jnp.int64(scale) + keyed) % rng.q_arr
+    return ev[..., :, 0]

@@ -1,0 +1,44 @@
+"""Production mesh construction (the dry-run contract).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before any jax init).
+
+Geometry: TPU v5e-256 pods.  Single pod = (data=16, model=16); two pods =
+(pod=2, data=16, model=16).  `pod` composes with `data` for the batch
+dimension; weights are never sharded across pods (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "BEFORE importing jax (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices[:need])
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """Small mesh over the real local devices (tests / CPU training)."""
+    n = jax.device_count()
+    dp = n // model_parallel
+    return jax.make_mesh((dp, model_parallel), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))
+
+
+# TPU v5e single-chip peaks (roofline constants; see brief)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link

@@ -1,0 +1,190 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step for the
+per-device partitioned program XLA actually emitted:
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS_BF16
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+plus MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE) / 2*N per token
+(decode), and the usefulness ratio MODEL_FLOPS / (HLO_FLOPs * chips).
+
+collective_bytes comes from parsing the post-SPMD HLO text — cost_analysis
+does not expose it (see the brief).  We sum RESULT-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(the dominant cost for ring algorithms is ~result bytes on the wire;
+all-reduce counted 2x for its reduce-scatter + all-gather phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models.config import ModelConfig
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+_ARR_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _ARR_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-op-kind result bytes from post-SPMD HLO (per device)."""
+    out: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        if m.group("suffix") == "-done":
+            continue                       # counted at -start
+        op = m.group("op")
+        b = _type_bytes(m.group("type"))
+        if op == "all-reduce":
+            b *= 2                         # RS + AG phases on the wire
+        out[op] = out.get(op, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float          # HLO bytes-accessed: UNFUSED upper bound
+    coll_bytes_per_dev: float
+    coll_by_op: Dict[str, int]
+    model_flops_per_dev: float
+    mem_floor_bytes: float = 0.0  # analytic fused floor (see memory_floor)
+    compute_s: float = 0.0
+    memory_s: float = 0.0         # floor-based (TPU fuses elementwise)
+    memory_upper_s: float = 0.0   # unfused bytes-accessed bound
+    collective_s: float = 0.0
+
+    def __post_init__(self):
+        self.compute_s = self.flops_per_dev / PEAK_FLOPS_BF16
+        self.memory_upper_s = self.bytes_per_dev / HBM_BW
+        floor = self.mem_floor_bytes or self.bytes_per_dev
+        self.memory_s = floor / HBM_BW
+        self.collective_s = self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is 'useful'
+        (catches remat recompute / dispatch waste)."""
+        return (self.model_flops_per_dev / self.flops_per_dev
+                if self.flops_per_dev else 0.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak FLOP/s at the roofline step time (MFU bound)."""
+        t = self.step_time_s
+        return (self.model_flops_per_dev / PEAK_FLOPS_BF16) / t if t else 0.0
+
+
+def model_flops(cfg: ModelConfig, shape_kind: str, seq: int, gb: int,
+                chips: int) -> float:
+    """Analytic MODEL_FLOPS per device per step."""
+    n_active = cfg.active_param_count()
+    if shape_kind == "train":
+        total = 6.0 * n_active * (seq * gb)
+    elif shape_kind == "prefill":
+        total = 2.0 * n_active * (seq * gb)
+    else:  # decode: one token per sequence (+ attention reads not counted)
+        total = 2.0 * n_active * gb
+    return total / chips
+
+
+def memory_floor(cfg: ModelConfig, shape_kind: str, seq: int, gb: int,
+                 chips: int, data_shards: int) -> float:
+    """Analytic per-device HBM-traffic floor (perfect fusion).
+
+    HLO 'bytes accessed' counts every unfused op's operands — a gross
+    upper bound on CPU-lowered modules.  The floor below is what a
+    well-fused TPU program must still move:
+
+      train   : params fwd-read + bwd-read + grad-write + opt m/v rw (f32)
+                + one activation write+read per layer boundary
+      prefill : params read + activations once + cache write
+      decode  : active params read + full cache/state read (per token)
+    """
+    p_total = cfg.param_count()
+    p_active = cfg.active_param_count()
+    p_dev = p_total * 2 / chips                    # bf16, fully sharded
+    toks_dev = seq * gb / max(data_shards, 1)
+    act_rw = 2 * toks_dev * cfg.d_model * 2 * cfg.num_layers
+    if shape_kind == "train":
+        opt_rw = p_total * 4 * 4 / chips           # m,v f32 read+write
+        grads = p_total * 4 / chips
+        return 3 * p_dev + opt_rw + grads + act_rw
+    if shape_kind == "prefill":
+        kv_dev = _cache_bytes(cfg, seq, gb) / chips
+        return p_dev + act_rw + kv_dev
+    # decode
+    kv_dev = _cache_bytes(cfg, seq, gb) / chips
+    return p_active * 2 / chips + kv_dev
+
+
+def _cache_bytes(cfg: ModelConfig, seq: int, gb: int) -> float:
+    if cfg.attention == "mla":
+        per_tok = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+    else:
+        per_tok = 2 * cfg.num_kv_heads * cfg.hd
+    n_attn = sum(k in ("attn",) for k in cfg.pattern) * cfg.num_groups
+    n_local = sum(k == "local" for k in cfg.pattern) * cfg.num_groups
+    n_state = sum(k in ("rglru", "mlstm", "slstm")
+                  for k in cfg.pattern) * cfg.num_groups
+    total = n_attn * gb * seq * per_tok * 2
+    total += n_local * gb * min(seq, cfg.window or seq) * per_tok * 2
+    total += n_state * gb * 4 * cfg.d_model * 4     # rough state bytes
+    return float(total)
+
+
+def make_terms(cfg: ModelConfig, arch: str, shape: str, mesh_name: str,
+               chips: int, shape_kind: str, seq: int, gb: int,
+               cost: Dict, hlo_text: Optional[str],
+               data_shards: int = 16) -> RooflineTerms:
+    coll = collective_bytes(hlo_text) if hlo_text else {}
+    return RooflineTerms(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_dev=float(cost.get("flops", 0.0)),
+        bytes_per_dev=float(cost.get("bytes accessed", 0.0)),
+        coll_bytes_per_dev=float(sum(coll.values())),
+        coll_by_op=coll,
+        model_flops_per_dev=model_flops(cfg, shape_kind, seq, gb, chips),
+        mem_floor_bytes=memory_floor(cfg, shape_kind, seq, gb, chips,
+                                     data_shards),
+    )

@@ -1,0 +1,87 @@
+"""Input specs for every (architecture x shape) dry-run cell.
+
+ShapeDtypeStruct stand-ins only — no device allocation.  The shape set per
+the assignment:
+
+    train_4k     seq=4096    gb=256   lowers train_step
+    prefill_32k  seq=32768   gb=32    lowers prefill
+    decode_32k   seq=32768   gb=128   lowers serve_step (1 token, full cache)
+    long_500k    seq=524288  gb=1     lowers serve_step (sub-quadratic only)
+
+Skips (DESIGN.md §4.1): long_500k is only legal for configs whose serve
+state is O(1) in context (`cfg.sub_quadratic`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import serve as SV
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import train_lib as TL
+
+PyTree = Any
+
+SHAPES = {
+    "train_4k":    dict(seq_len=4096,   global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq_len=32768,  global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524288, global_batch=1,   kind="decode"),
+}
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention KV cache at 524k tokens is neither "
+                       "sub-quadratic nor HBM-feasible; skipped per the "
+                       "assignment rule (runs only for ssm/hybrid)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def batch_specs(cfg: ModelConfig, seq: int, gb: int) -> Dict[str, Any]:
+    b: Dict[str, Any] = {"tokens": _sds((gb, seq), jnp.int32)}
+    if cfg.frontend == "patches":
+        b["patches"] = _sds((gb, cfg.num_patches, cfg.d_model), cfg.dtype)
+    if cfg.frontend == "frames":
+        b["frames"] = _sds((gb, cfg.encoder_seq, cfg.d_model), cfg.dtype)
+    return b
+
+
+def train_state_specs(cfg: ModelConfig, tcfg: TL.TrainConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda: TL.init_state(cfg, tcfg, jax.random.PRNGKey(0)))
+
+
+def cache_specs_abstract(cfg: ModelConfig, gb: int, seq: int) -> PyTree:
+    return jax.eval_shape(lambda: SV.init_cache(cfg, gb, seq))
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                tcfg: Optional[TL.TrainConfig] = None) -> Dict[str, Any]:
+    """-> {"kind", "args": tuple of ShapeDtypeStruct pytrees}."""
+    meta = SHAPES[shape]
+    seq, gb, kind = meta["seq_len"], meta["global_batch"], meta["kind"]
+    if kind == "train":
+        tcfg = tcfg or TL.TrainConfig()
+        return {"kind": "train",
+                "args": (train_state_specs(cfg, tcfg),
+                         batch_specs(cfg, seq, gb))}
+    if kind == "prefill":
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        return {"kind": "prefill",
+                "args": (params, batch_specs(cfg, seq, gb))}
+    # decode: one token against a cache of length seq
+    params = jax.eval_shape(
+        lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    cache = cache_specs_abstract(cfg, gb, seq)
+    token = _sds((gb,), jnp.int32)
+    return {"kind": "decode", "args": (params, cache, token)}

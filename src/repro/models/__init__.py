@@ -1,0 +1,1 @@
+"""LM substrate: the ten assigned architectures as composable JAX modules."""

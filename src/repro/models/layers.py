@@ -1,0 +1,343 @@
+"""Shared neural layers: norms, RoPE, chunked (flash-style) attention,
+GQA/MQA and MLA attention blocks, SwiGLU FFN.
+
+Functional style: every layer is (init(key, cfg) -> params, apply(params, x)
+-> y) over plain dict pytrees.  Param names are load-bearing — the sharding
+rules in parallel/sharding.py map names -> mesh axes.
+
+Numerics: params in cfg.param_dtype, matmul compute in cfg.dtype, softmax /
+norms / router in float32.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.constrain import shard
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _pdt(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd], positions broadcastable to [..., S]; rotates the
+    last dim pairwise.  (For head-free tensors pass [..., S, 1, hd].)"""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    positions = jnp.atleast_1d(positions)
+    angles = positions[..., None].astype(jnp.float32) * freqs   # [..., S, half]
+    angles = angles[..., None, :]                               # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked flash-style attention (pure JAX, O(S * chunk) memory)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0, chunk: int = 256,
+                    t_valid: Optional[int] = None) -> jax.Array:
+    """Query-chunked attention with per-chunk rematerialization.
+
+    q: [B, S, H, dk], k: [B, T, H, dk], v: [B, T, H, dv]
+    (GQA callers repeat KV heads to H first — repeat_kv below — so the head
+    axis shards cleanly on `model` even when kv_heads < mesh model size.)
+    Returns [B, S, H, dv].
+
+    Design notes (DESIGN.md §4, EXPERIMENTS.md §Perf):
+      * chunks are an UNROLLED python loop, each chunk wrapped in
+        jax.checkpoint — backward recomputes one [qc, T] score block at a
+        time, so residuals are O(inputs+outputs) and the transient is
+        O(qc * T), which is what lets 32k-prefill cells fit HBM;
+      * no lax.scan: XLA's cost_analysis counts while bodies ONCE, which
+        would corrupt the roofline FLOP terms (verified 8x undercount);
+      * full-rectangle scores (masked, not skipped) — HLO FLOPs for causal
+        attention are ~2x the useful triangle; the roofline notes this.
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    T = k.shape[1]
+    t_valid = T if t_valid is None else t_valid
+    qc = min(chunk, S)
+    nq = -(-S // qc)
+    pad = nq * qc - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * 2)
+
+    # TP strategy: shard heads on `model` when there are enough of them.
+    # For head counts below the model-axis size the heads REPLICATE
+    # (§Perf iteration A: the context-parallel alternative — sharding the
+    # KV/T axis — made XLA reduce O(S*T)-sized partials over the model
+    # axis every chunk: 205 GB/dev of all-reduce on smollm train_4k.
+    # Replicating a 15-head attention costs ~2x compute on a tiny slice of
+    # the model and ZERO extra collectives; measured 0.0094 -> see
+    # EXPERIMENTS.md §Perf for the after numbers).
+    from repro.parallel.constrain import _ambient_mesh
+    mesh = _ambient_mesh()
+    model_sz = mesh.shape.get("model", 1) if mesh is not None else 1
+    head_par = H >= model_sz
+
+    if head_par:
+        kf = shard(k.astype(jnp.float32), "batch", None, "model", None)
+        vf = shard(v.astype(jnp.float32), "batch", None, "model", None)
+    else:
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+    j_pos = jnp.arange(T)
+    inv = 1.0 / math.sqrt(dk)
+
+    def chunk_fn(q_c, k_, v_, i_pos):
+        s = jnp.einsum("bshd,bthd->bhst",
+                       q_c.astype(jnp.float32) * inv, k_)
+        if head_par:
+            s = shard(s, "batch", "model", None, None)
+        mask = j_pos[None, :] < t_valid
+        if causal:
+            mask = mask & (j_pos[None, :] <= i_pos[:, None])
+        if window:
+            mask = mask & (j_pos[None, :] > i_pos[:, None] - window)
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        # every query row has >= 1 valid key in all our uses (causal
+        # includes self), so the softmax is NaN-free.
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhst,bthd->bshd", p, v_)
+
+    remat_chunk = jax.checkpoint(chunk_fn)
+    outs = []
+    for ci in range(nq):
+        i_pos = q_offset + ci * qc + jnp.arange(qc)
+        outs.append(remat_chunk(q[:, ci * qc:(ci + 1) * qc], kf, vf, i_pos))
+    out = jnp.concatenate(outs, axis=1) if nq > 1 else outs[0]
+    return out[:, :S].astype(q.dtype)                   # [B,S,H,dv]
+
+
+def repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """[B, T, KV, hd] -> [B, T, KV*groups, hd] (GQA expansion)."""
+    if groups == 1:
+        return x
+    B, T, KV, hd = x.shape
+    x = jnp.broadcast_to(x[:, :, :, None, :], (B, T, KV, groups, hd))
+    return x.reshape(B, T, KV * groups, hd)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                     t_valid: jax.Array, window: int = 0,
+                     pos: Optional[jax.Array] = None) -> jax.Array:
+    """Single-position attention against a cache.
+
+    q: [B, 1, KV, G, hd], k/v: [B, T, KV, hd]; t_valid: current length [B]
+    or scalar.  Full-row softmax (T scores per query is tiny).
+    """
+    B, _, KVh, G, hd = q.shape
+    T = k.shape[1]
+    s = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    j = jnp.arange(T)
+    tv = jnp.asarray(t_valid)
+    tv = tv[:, None] if tv.ndim == 1 else tv[None, None]
+    mask = j[None, :] < tv                                   # [B or 1, T]
+    if window:
+        mask = mask & (j[None, :] >= tv - window)
+    s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ModelConfig) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    pdt = _pdt(cfg)
+    return {
+        "wq": dense_init(ks[0], d, H * hd, pdt),
+        "wk": dense_init(ks[1], d, KV * hd, pdt),
+        "wv": dense_init(ks[2], d, KV * hd, pdt),
+        "wo": dense_init(ks[3], H * hd, d, pdt),
+    }
+
+
+def gqa_project_kv(params: dict, cfg: ModelConfig, x: jax.Array,
+                   positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    k = (x @ params["wk"].astype(dt)).reshape(B, S, KV, hd)
+    v = (x @ params["wv"].astype(dt)).reshape(B, S, KV, hd)
+    k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+def gqa_project_q(params: dict, cfg: ModelConfig, x: jax.Array,
+                  positions: jax.Array) -> jax.Array:
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.hd
+    dt = _dt(cfg)
+    q = shard((x @ params["wq"].astype(dt)).reshape(B, S, H, hd),
+              "batch", None, "model", None)
+    return rope(q, positions, cfg.rope_theta)
+
+
+def gqa_apply(params: dict, cfg: ModelConfig, x: jax.Array, *,
+              window: int = 0, causal: bool = True,
+              kv_x: Optional[jax.Array] = None,
+              use_rope: bool = True) -> jax.Array:
+    """Self- (or cross-, via kv_x) attention over a full sequence."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    src = x if kv_x is None else kv_x
+    pos_q = jnp.arange(S)
+    pos_k = jnp.arange(src.shape[1])
+    q = shard((x @ params["wq"].astype(dt)).reshape(B, S, H, hd),
+              "batch", None, "model", None)
+    k = shard((src @ params["wk"].astype(dt)).reshape(B, src.shape[1], KV, hd),
+              "batch", None, "model", None)
+    v = shard((src @ params["wv"].astype(dt)).reshape(B, src.shape[1], KV, hd),
+              "batch", None, "model", None)
+    if use_rope:
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_k, cfg.rope_theta)
+    o = flash_attention(q, repeat_kv(k, H // KV), repeat_kv(v, H // KV),
+                        causal=causal, window=window, chunk=cfg.attn_chunk)
+    o = o.reshape(B, S, H * hd)
+    return shard(o @ params["wo"].astype(dt), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention block (MiniCPM3 / DeepSeek-V2 latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig) -> dict:
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.hd
+    qr, kvr, rd = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    pdt = _pdt(cfg)
+    return {
+        "wq_down": dense_init(ks[0], d, qr, pdt),
+        "q_norm": rmsnorm_init(qr, pdt),
+        "wq_up": dense_init(ks[1], qr, H * (hd + rd), pdt),
+        "wkv_down": dense_init(ks[2], d, kvr + rd, pdt),
+        "kv_norm": rmsnorm_init(kvr, pdt),
+        "wk_up": dense_init(ks[3], kvr, H * hd, pdt),
+        "wv_up": dense_init(ks[4], kvr, H * hd, pdt),
+        "wo": dense_init(ks[5], H * hd, d, pdt),
+    }
+
+
+def mla_latent(params: dict, cfg: ModelConfig, x: jax.Array,
+               positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Compressed KV: (c_kv [B,S,kvr], k_rope [B,S,rd]) — the decode cache."""
+    dt = _dt(cfg)
+    kvr = cfg.kv_lora_rank
+    down = x @ params["wkv_down"].astype(dt)
+    c_kv = rmsnorm(params["kv_norm"], down[..., :kvr], cfg.norm_eps)
+    k_rope = rope(down[..., kvr:][..., None, :],    # add unit head axis
+                  positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_queries(params: dict, cfg: ModelConfig, x: jax.Array,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    B, S, _ = x.shape
+    H, hd, rd = cfg.num_heads, cfg.hd, cfg.qk_rope_head_dim
+    dt = _dt(cfg)
+    cq = rmsnorm(params["q_norm"], x @ params["wq_down"].astype(dt),
+                 cfg.norm_eps)
+    q = (cq @ params["wq_up"].astype(dt)).reshape(B, S, H, hd + rd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence MLA (train / prefill): expand latents, run GQA-style
+    attention with KV=H, G=1 on concat(nope, rope) dims."""
+    B, S, _ = x.shape
+    H, hd, rd = cfg.num_heads, cfg.hd, cfg.qk_rope_head_dim
+    dt = _dt(cfg)
+    pos = jnp.arange(S)
+    c_kv, k_rope = mla_latent(params, cfg, x, pos)
+    q_nope, q_rope = mla_queries(params, cfg, x, pos)
+    k_nope = shard((c_kv @ params["wk_up"].astype(dt)).reshape(B, S, H, hd),
+                   "batch", None, "model", None)
+    v = shard((c_kv @ params["wv_up"].astype(dt)).reshape(B, S, H, hd),
+              "batch", None, "model", None)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)            # [B,S,H,hd+rd]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rd))],
+        axis=-1)
+    o = flash_attention(q, k, v, causal=True, chunk=cfg.attn_chunk)
+    o = o.reshape(B, S, H * hd)
+    return shard(o @ params["wo"].astype(dt), "batch", None, None)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU FFN
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pdt = _pdt(cfg)
+    return {
+        "wi": dense_init(ks[0], d, ff, pdt),
+        "wg": dense_init(ks[1], d, ff, pdt),
+        "wo": dense_init(ks[2], ff, d, pdt),
+    }
+
+
+def swiglu_apply(params: dict, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    h = jax.nn.silu(x @ params["wg"].astype(dt)) * (x @ params["wi"].astype(dt))
+    if h.ndim == 3:
+        h = shard(h, "batch", None, "model")
+    out = h @ params["wo"].astype(dt)
+    return shard(out, *(["batch"] + [None] * (out.ndim - 1)))

@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block = (gelu gate branch) * (causal conv1d -> RG-LRU) -> out projection.
+RG-LRU per channel:
+
+    r_t = sigmoid(x_t * w_a + b_a)              recurrence gate
+    i_t = sigmoid(x_t * w_x + b_x)              input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)      c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan (log-depth, parallel over the
+mesh's data axis); decode is the single-step recurrence with O(1) state —
+this is what makes long_500k a legal cell for this family (DESIGN.md §4.1).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+_C = 8.0
+
+
+class RecurrentState(NamedTuple):
+    conv: jax.Array   # [B, conv_width-1, w] trailing inputs
+    h: jax.Array      # [B, w] RG-LRU hidden
+
+
+def rglru_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 5)
+    pdt = jnp.dtype(cfg.param_dtype)
+    # Lambda init so a ~ U(0.9, 0.999)^c at r=1 (griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^-1(-log u)
+    return {
+        "w_gate": L.dense_init(ks[1], d, w, pdt),
+        "w_in": L.dense_init(ks[2], d, w, pdt),
+        "w_out": L.dense_init(ks[3], w, d, pdt),
+        "conv_k": (jax.random.normal(ks[4], (cfg.conv_width, w), jnp.float32)
+                   / math.sqrt(cfg.conv_width)).astype(pdt),
+        "lam": lam,                                  # f32
+        "gate_a": jnp.zeros((w,), jnp.float32),
+        "gate_x": jnp.zeros((w,), jnp.float32),
+        "bias_a": jnp.zeros((w,), jnp.float32),
+        "bias_x": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _gates(params: dict, u: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """u: [..., w] f32 -> (a, gated input) both f32."""
+    r = jax.nn.sigmoid(u * params["gate_a"] + params["bias_a"])
+    i = jax.nn.sigmoid(u * params["gate_x"] + params["bias_x"])
+    decay = _C * jax.nn.softplus(params["lam"])
+    a = jnp.exp(-decay * r)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * u)
+    return a, gated
+
+
+def _conv_causal(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Per-channel causal conv, width cfg.conv_width. x: [B, S, w]."""
+    kern = params["conv_k"].astype(x.dtype)
+    out = x * kern[-1]
+    for i in range(1, cfg.conv_width):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * kern[-1 - i]
+    return out
+
+
+def rglru_scan(params: dict, u: jax.Array) -> jax.Array:
+    """Parallel RG-LRU over a full sequence. u: [B, S, w] -> [B, S, w]."""
+    uf = u.astype(jnp.float32)
+    a, b = _gates(params, uf)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(params: dict, u_t: jax.Array, h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One decode step. u_t: [B, w], h: [B, w] f32."""
+    uf = u_t.astype(jnp.float32)
+    a, b = _gates(params, uf)
+    h_new = a * h + b
+    return h_new.astype(u_t.dtype), h_new
+
+
+def block_apply(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence recurrent block. x: [B, S, d]."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(dt))
+    u = x @ params["w_in"].astype(dt)
+    u = _conv_causal(params, u, cfg)
+    h = rglru_scan(params, u)
+    return (gate * h) @ params["w_out"].astype(dt)
+
+
+def block_step(params: dict, cfg: ModelConfig, x_t: jax.Array,
+               state: RecurrentState) -> Tuple[jax.Array, RecurrentState]:
+    """One-token decode. x_t: [B, d]."""
+    dt = x_t.dtype
+    gate = jax.nn.gelu(x_t @ params["w_gate"].astype(dt))
+    u_t = x_t @ params["w_in"].astype(dt)                      # [B, w]
+    # conv over (state.conv ++ u_t)
+    kern = params["conv_k"].astype(dt)
+    hist = jnp.concatenate([state.conv, u_t[:, None, :]], axis=1)
+    u_conv = jnp.einsum("btw,tw->bw", hist, kern)
+    out_h, h_new = rglru_step(params, u_conv, state.h)
+    new_state = RecurrentState(conv=hist[:, 1:], h=h_new)
+    y = (gate * out_h) @ params["w_out"].astype(dt)
+    return y, new_state
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype) -> RecurrentState:
+    w = cfg.lru_width or cfg.d_model
+    return RecurrentState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        h=jnp.zeros((batch, w), jnp.float32))

@@ -1,0 +1,399 @@
+"""Serving path: KV/state caches, prefill, and single-token decode.
+
+Cache layouts (all leaves carry a leading [G] = num_groups axis so the
+decode step scans groups exactly like training scans them):
+
+  gqa   : k, v            [G, B, T, KV, hd]     (keys stored post-RoPE)
+  mla   : ckv             [G, B, T, kvr]        latent (the MLA cache win)
+          krope           [G, B, T, rd]
+  local : k, v            [G, B, W, KV, hd]     ring buffer, W = window
+  cross : ck, cv          [G, B, F, KV, hd]     whisper encoder K/V (static)
+  rglru : conv [G,B,cw-1,w], h [G,B,w]
+  mlstm : C [G,B,H,hd,hd], n [G,B,H,hd], m [G,B,H]
+  slstm : h/c/n/m         [G, B, w]
+
+`pos` is a traced scalar — decode_32k / long_500k lower ONE decode_step with
+a full-length cache, per the assignment's serve_step contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models import xlstm as X
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def _dus(buf: jax.Array, update: jax.Array, pos: jax.Array,
+         axis: int) -> jax.Array:
+    """dynamic_update_slice at `pos` along `axis` (index dtypes unified —
+    python-int zeros become int64 under x64 and then clash with int32 pos)."""
+    starts = [jnp.asarray(0, pos.dtype)] * buf.ndim
+    starts[axis] = pos
+    return jax.lax.dynamic_update_slice(buf, update, tuple(starts))
+
+
+# ---------------------------------------------------------------------------
+# cache init
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: str, B: int, T: int, dt) -> Dict:
+    KV, hd = cfg.num_kv_heads, cfg.hd
+    if kind == "attn":
+        if cfg.attention == "mla":
+            c = {"ckv": jnp.zeros((B, T, cfg.kv_lora_rank), dt),
+                 "krope": jnp.zeros((B, T, cfg.qk_rope_head_dim), dt)}
+        else:
+            c = {"k": jnp.zeros((B, T, KV, hd), dt),
+                 "v": jnp.zeros((B, T, KV, hd), dt)}
+        if cfg.is_encoder_decoder:
+            c["ck"] = jnp.zeros((B, cfg.encoder_seq, KV, hd), dt)
+            c["cv"] = jnp.zeros((B, cfg.encoder_seq, KV, hd), dt)
+        return c
+    if kind == "local":
+        W = cfg.window
+        return {"k": jnp.zeros((B, W, KV, hd), dt),
+                "v": jnp.zeros((B, W, KV, hd), dt)}
+    if kind == "rglru":
+        w = cfg.lru_width or cfg.d_model
+        return {"conv": jnp.zeros((B, cfg.conv_width - 1, w), dt),
+                "h": jnp.zeros((B, w), jnp.float32)}
+    if kind == "mlstm":
+        w = 2 * cfg.d_model
+        H = cfg.num_heads
+        return {"C": jnp.zeros((B, H, w // H, w // H), jnp.float32),
+                "n": jnp.zeros((B, H, w // H), jnp.float32),
+                "m": jnp.full((B, H), -1e30, jnp.float32)}
+    if kind == "slstm":
+        w = cfg.d_model
+        z = jnp.zeros((B, w), jnp.float32)
+        return {"h": z, "c": z, "n": z,
+                "m": jnp.full((B, w), -1e30, jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, B: int, T_max: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    G = cfg.num_groups
+    blocks = {}
+    for i, kind in enumerate(cfg.pattern):
+        one = _block_cache(cfg, kind, B, T_max, dt)
+        blocks[f"b{i}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (G,) + x.shape), one)
+    return {"pos": jnp.zeros((), jnp.int32), "blocks": blocks}
+
+
+# ---------------------------------------------------------------------------
+# per-kind decode steps
+# ---------------------------------------------------------------------------
+
+def _gqa_step(p: Dict, cfg: ModelConfig, x_t: jax.Array, cache: Dict,
+              pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """x_t: [B, d] (already normed). Returns attn output + updated cache."""
+    B, d = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x_t.dtype
+    posb = pos[None]                                        # [1] -> bcast S=1
+    q = (x_t @ p["wq"].astype(dt)).reshape(B, 1, H, hd)
+    q = L.rope(q, posb, cfg.rope_theta)
+    k_t = (x_t @ p["wk"].astype(dt)).reshape(B, 1, KV, hd)
+    k_t = L.rope(k_t, posb, cfg.rope_theta)
+    v_t = (x_t @ p["wv"].astype(dt)).reshape(B, 1, KV, hd)
+    k = _dus(cache["k"], k_t, pos, axis=1)
+    v = _dus(cache["v"], v_t, pos, axis=1)
+    o = L.decode_attention(q.reshape(B, 1, KV, H // KV, hd), k, v,
+                           t_valid=pos + 1)
+    o = o.reshape(B, H * hd) @ p["wo"].astype(dt)
+    return o, {**cache, "k": k, "v": v}
+
+
+def _local_step(p: Dict, cfg: ModelConfig, x_t: jax.Array, cache: Dict,
+                pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Ring-buffer sliding-window attention step (W slots)."""
+    B, d = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    W = cfg.window
+    dt = x_t.dtype
+    posb = pos[None]
+    slot = pos % W
+    q = L.rope((x_t @ p["wq"].astype(dt)).reshape(B, 1, H, hd), posb,
+               cfg.rope_theta)
+    k_t = L.rope((x_t @ p["wk"].astype(dt)).reshape(B, 1, KV, hd), posb,
+                 cfg.rope_theta)
+    v_t = (x_t @ p["wv"].astype(dt)).reshape(B, 1, KV, hd)
+    k = _dus(cache["k"], k_t, slot, axis=1)
+    v = _dus(cache["v"], v_t, slot, axis=1)
+    # slot j holds absolute position pos - ((slot - j) mod W); valid if >= 0
+    j = jnp.arange(W)
+    slot_pos = pos - ((slot - j) % W)
+    mask = slot_pos >= 0                                    # [W]
+    qg = q.reshape(B, 1, KV, H // KV, hd)
+    s = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(mask[None, None, None, None, :], s, -jnp.inf)
+    pw = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,btkh->bskgh", pw, v.astype(jnp.float32))
+    o = o.astype(dt).reshape(B, H * hd) @ p["wo"].astype(dt)
+    return o, {**cache, "k": k, "v": v}
+
+
+def _mla_step(p: Dict, cfg: ModelConfig, x_t: jax.Array, cache: Dict,
+              pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    """Latent-space MLA decode (never expands the KV cache)."""
+    B, d = x_t.shape
+    H, hd, rd = cfg.num_heads, cfg.hd, cfg.qk_rope_head_dim
+    kvr = cfg.kv_lora_rank
+    dt = x_t.dtype
+    posb = pos[None]
+    c_kv_t, k_rope_t = L.mla_latent(p, cfg, x_t[:, None, :], posb)
+    q_nope, q_rope = L.mla_queries(p, cfg, x_t[:, None, :], posb)
+    ckv = _dus(cache["ckv"], c_kv_t, pos, axis=1)
+    krope = _dus(cache["krope"], k_rope_t, pos, axis=1)
+    # absorb wk_up into the query:  q_lat[h] = q_nope[h] @ wk_up[:, h, :]^T
+    wk_up = p["wk_up"].astype(dt).reshape(kvr, H, hd)
+    q_lat = jnp.einsum("bhd,khd->bhk", q_nope[:, 0], wk_up)     # [B,H,kvr]
+    s = (jnp.einsum("bhk,btk->bht", q_lat.astype(jnp.float32),
+                    ckv.astype(jnp.float32))
+         + jnp.einsum("bhr,btr->bht", q_rope[:, 0].astype(jnp.float32),
+                      krope.astype(jnp.float32))) / math.sqrt(hd + rd)
+    mask = jnp.arange(ckv.shape[1]) < pos + 1
+    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    pw = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bht,btk->bhk", pw, ckv.astype(jnp.float32))  # latent ctx
+    wv_up = p["wv_up"].astype(dt).reshape(kvr, H, hd)
+    o = jnp.einsum("bhk,khd->bhd", ctx.astype(dt), wv_up)
+    o = o.reshape(B, H * hd) @ p["wo"].astype(dt)
+    return o, {**cache, "ckv": ckv, "krope": krope}
+
+
+def _cross_step(p: Dict, cfg: ModelConfig, x_t: jax.Array,
+                cache: Dict) -> jax.Array:
+    """Cross-attention against the cached encoder K/V."""
+    B, d = x_t.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x_t.dtype
+    q = (x_t @ p["wq"].astype(dt)).reshape(B, 1, KV, H // KV, hd)
+    o = L.decode_attention(q, cache["ck"], cache["cv"],
+                           t_valid=cache["ck"].shape[1])
+    return o.reshape(B, H * hd) @ p["wo"].astype(dt)
+
+
+def _block_step(cfg: ModelConfig, kind: str, p: Dict, x_t: jax.Array,
+                cache: Dict, pos: jax.Array) -> Tuple[jax.Array, Dict]:
+    h = L.rmsnorm(p["ln1"], x_t, cfg.norm_eps)
+    if kind in ("attn", "local"):
+        if kind == "local":
+            o, cache = _local_step(p["attn"], cfg, h, cache, pos)
+        elif cfg.attention == "mla":
+            o, cache = _mla_step(p["attn"], cfg, h, cache, pos)
+        else:
+            o, cache = _gqa_step(p["attn"], cfg, h, cache, pos)
+        x_t = x_t + o
+        if cfg.is_encoder_decoder:
+            h = L.rmsnorm(p["ln_cross"], x_t, cfg.norm_eps)
+            x_t = x_t + _cross_step(p["cross"], cfg, h, cache)
+        h = L.rmsnorm(p["ln2"], x_t, cfg.norm_eps)
+        if cfg.num_experts:
+            x_t = x_t + MOE.moe_apply(p["moe"], cfg, h[:, None, :])[:, 0]
+        else:
+            x_t = x_t + L.swiglu_apply(p["ffn"], h)
+    elif kind == "rglru":
+        st = RG.RecurrentState(conv=cache["conv"], h=cache["h"])
+        o, st = RG.block_step(p["rec"], cfg, h, st)
+        cache = {"conv": st.conv, "h": st.h}
+        x_t = x_t + o
+        h = L.rmsnorm(p["ln2"], x_t, cfg.norm_eps)
+        x_t = x_t + L.swiglu_apply(p["ffn"], h)
+    elif kind == "mlstm":
+        st = X.MLstmState(C=cache["C"], n=cache["n"], m=cache["m"])
+        o, st = X.mlstm_block_step(p["cell"], cfg, h, st)
+        cache = {"C": st.C, "n": st.n, "m": st.m}
+        x_t = x_t + o
+    elif kind == "slstm":
+        st = X.SLstmState(h=cache["h"], c=cache["c"], n=cache["n"],
+                          m=cache["m"])
+        o, st = X.slstm_block_step(p["cell"], cfg, h, st)
+        cache = {"h": st.h, "c": st.c, "n": st.n, "m": st.m}
+        x_t = x_t + o
+    return x_t, cache
+
+
+# ---------------------------------------------------------------------------
+# public: decode_step / prefill
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params: PyTree, cache: Dict,
+                token: jax.Array) -> Tuple[jax.Array, Dict]:
+    """One new token against the cache.  token: [B] int32 -> logits [B, V]."""
+    dt = jnp.dtype(cfg.dtype)
+    pos = cache["pos"]
+    x_t = jnp.take(params["embed"], token, axis=0).astype(dt)
+
+    def body(x, inp):
+        gp, gc = inp
+        new_gc = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, new_gc[f"b{i}"] = _block_step(cfg, kind, gp[f"b{i}"], x,
+                                             gc[f"b{i}"], pos)
+        return x, new_gc
+
+    if cfg.scan_layers:
+        x_t, new_blocks = jax.lax.scan(body, x_t,
+                                       (params["groups"], cache["blocks"]))
+    else:
+        # unrolled (dry-run cost-measurement path — see launch/dryrun.py)
+        G = jax.tree.leaves(params["groups"])[0].shape[0]
+        outs = []
+        for g in range(G):
+            x_t, gc = body(x_t, jax.tree.map(
+                lambda a: a[g], (params["groups"], cache["blocks"])))
+            outs.append(gc)
+        new_blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x_t = L.rmsnorm(params["final_norm"], x_t, cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = x_t @ unembed.astype(dt)
+    return logits, {"pos": pos + 1, "blocks": new_blocks}
+
+
+def _block_prefill(cfg: ModelConfig, kind: str, p: Dict, x: jax.Array,
+                   T_max: int, enc_out) -> Tuple[jax.Array, Dict]:
+    """Full-sequence block application that also emits its decode cache."""
+    B, S, d = x.shape
+    dt = x.dtype
+    KV, hd, H = cfg.num_kv_heads, cfg.hd, cfg.num_heads
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    pos = jnp.arange(S)
+    cache: Dict[str, jax.Array] = {}
+    if kind in ("attn", "local"):
+        window = cfg.window if kind == "local" else 0
+        if cfg.attention == "mla":
+            c_kv, k_rope = L.mla_latent(p["attn"], cfg, h, pos)
+            pad = [(0, 0), (0, T_max - S), (0, 0)]
+            cache["ckv"] = jnp.pad(c_kv, pad)
+            cache["krope"] = jnp.pad(k_rope, pad)
+            x = x + L.mla_apply(p["attn"], cfg, h)
+        else:
+            k, v = L.gqa_project_kv(p["attn"], cfg, h, pos)
+            q = L.gqa_project_q(p["attn"], cfg, h, pos)
+            G = H // KV
+            o = L.flash_attention(q, L.repeat_kv(k, G), L.repeat_kv(v, G),
+                                  causal=True, window=window,
+                                  chunk=cfg.attn_chunk)
+            x = x + o.reshape(B, S, H * hd) @ p["attn"]["wo"].astype(dt)
+            if kind == "local":
+                W = cfg.window
+                # last W positions, laid out so slot j = pos (S+j-W) % W...
+                # ring layout: slot j holds abs position with j == p % W
+                take = jnp.arange(T_max := W) if False else None
+                idx = (jnp.arange(W) - W + S) if S >= W else None
+                if S >= W:
+                    sel = jnp.arange(S - W, S)
+                    slots = sel % W
+                    kw = jnp.zeros((B, W, KV, hd), dt).at[:, slots].set(
+                        k[:, sel])
+                    vw = jnp.zeros((B, W, KV, hd), dt).at[:, slots].set(
+                        v[:, sel])
+                else:
+                    kw = jnp.zeros((B, W, KV, hd), dt).at[:, :S].set(k)
+                    vw = jnp.zeros((B, W, KV, hd), dt).at[:, :S].set(v)
+                cache["k"], cache["v"] = kw, vw
+            else:
+                pad = [(0, 0), (0, T_max - S), (0, 0), (0, 0)]
+                cache["k"] = jnp.pad(k, pad)
+                cache["v"] = jnp.pad(v, pad)
+        if cfg.is_encoder_decoder:
+            h2 = L.rmsnorm(p["ln_cross"], x, cfg.norm_eps)
+            x = x + L.gqa_apply(p["cross"], cfg, h2, causal=False,
+                                kv_x=enc_out, use_rope=False)
+            F = enc_out.shape[1]
+            ck = (enc_out @ p["cross"]["wk"].astype(dt)).reshape(
+                B, F, KV, hd)
+            cv = (enc_out @ p["cross"]["wv"].astype(dt)).reshape(
+                B, F, KV, hd)
+            cache["ck"], cache["cv"] = ck, cv
+        h3 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.num_experts:
+            x = x + MOE.moe_apply(p["moe"], cfg, h3)
+        else:
+            x = x + L.swiglu_apply(p["ffn"], h3)
+    elif kind == "rglru":
+        dtp = x.dtype
+        gate = jax.nn.gelu(h @ p["rec"]["w_gate"].astype(dtp))
+        u = h @ p["rec"]["w_in"].astype(dtp)
+        from repro.models.rglru import _conv_causal, rglru_scan
+        u_conv = _conv_causal(p["rec"], u, cfg)
+        hh = rglru_scan(p["rec"], u_conv)
+        x = x + (gate * hh) @ p["rec"]["w_out"].astype(dtp)
+        cw = cfg.conv_width
+        cache["conv"] = u[:, S - (cw - 1):S, :] if S >= cw - 1 else jnp.pad(
+            u, [(0, 0), (cw - 1 - S, 0), (0, 0)])
+        cache["h"] = hh[:, -1].astype(jnp.float32)
+        h4 = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.swiglu_apply(p["ffn"], h4)
+    elif kind == "mlstm":
+        u = h @ p["cell"]["w_up"].astype(dt)
+        gate = jax.nn.silu(h @ p["cell"]["w_gate"].astype(dt))
+        hm, st = X.mlstm_chunkwise(p["cell"], cfg, u, chunk=cfg.attn_chunk)
+        hm = L.rmsnorm(p["cell"]["norm"], hm, cfg.norm_eps)
+        x = x + (hm * gate) @ p["cell"]["w_down"].astype(dt)
+        cache = {"C": st.C, "n": st.n, "m": st.m}
+    elif kind == "slstm":
+        hs, st = X.slstm_scan(p["cell"], cfg, h)
+        hs = L.rmsnorm(p["cell"]["norm"], hs, cfg.norm_eps)
+        up = (hs @ p["cell"]["w_up1"].astype(dt)) * jax.nn.gelu(
+            hs @ p["cell"]["w_up2"].astype(dt))
+        x = x + up @ p["cell"]["w_down"].astype(dt)
+        cache = {"h": st.h, "c": st.c, "n": st.n, "m": st.m}
+    return x, cache
+
+
+def prefill(cfg: ModelConfig, params: PyTree, batch: Dict[str, jax.Array],
+            T_max: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """Process a prompt, returning (last-position logits [B,V], cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    T_max = T_max or S
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.frontend == "patches" and "patches" in batch:
+        P = batch["patches"].shape[1]
+        x = jnp.concatenate([batch["patches"].astype(dt), x[:, P:]], axis=1)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        from repro.models.transformer import _encode
+        enc_out = _encode(cfg, params, batch["frames"])
+
+    def body(x, gp):
+        gc = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, gc[f"b{i}"] = _block_prefill(cfg, kind, gp[f"b{i}"], x,
+                                            T_max, enc_out)
+        return x, gc
+
+    if cfg.remat:
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, blocks = jax.lax.scan(body, x, params["groups"])
+    else:
+        G = jax.tree.leaves(params["groups"])[0].shape[0]
+        outs = []
+        for g in range(G):
+            x, gc = body(x, jax.tree.map(lambda a: a[g], params["groups"]))
+            outs.append(gc)
+        blocks = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    x = L.rmsnorm(params["final_norm"], x[:, -1], cfg.norm_eps)
+    unembed = (params["embed"].T if cfg.tie_embeddings
+               else params["unembed"])
+    logits = x @ unembed.astype(dt)
+    return logits, {"pos": jnp.asarray(S, jnp.int32), "blocks": blocks}

@@ -1,0 +1,313 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, strict recurrence).
+
+mLSTM runs CHUNKWISE-PARALLEL for train/prefill: within a chunk the
+stabilized quadratic form, across chunks a scanned (C, n, m) state — per-step
+memory is O(chunk^2), which is what lets prefill_32k and train_4k lower
+without an S x S (or S-step carry) blow-up.  Decode is the O(1) recurrent
+step, making long_500k legal for this family.
+
+sLSTM has hidden-to-hidden feedback (R @ h_{t-1}) and is inherently
+sequential — lax.scan over time, as the paper itself concedes.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLstmState(NamedTuple):
+    C: jax.Array   # [B, H, hd, hd] matrix memory (f32)
+    n: jax.Array   # [B, H, hd] normalizer
+    m: jax.Array   # [B, H] stabilizer
+
+
+def mlstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = 2 * d                       # PF=2 up-projection (xLSTM paper)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_up": L.dense_init(ks[0], d, w, pdt),
+        "w_gate": L.dense_init(ks[1], d, w, pdt),
+        "wq": L.dense_init(ks[2], w, w, pdt),
+        "wk": L.dense_init(ks[3], w, w, pdt),
+        "wv": L.dense_init(ks[4], w, w, pdt),
+        "w_if": L.dense_init(ks[5], w, 2 * H, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((H,), jnp.float32),
+                                 3.0 * jnp.ones((H,), jnp.float32)]),
+        "norm": L.rmsnorm_init(w, pdt),
+        "w_down": L.dense_init(ks[6], w, d, pdt),
+    }
+
+
+def _mlstm_qkvif(params: dict, cfg: ModelConfig, u: jax.Array):
+    """u: [B, S, w] -> q,k,v [B,H,S,hd], i/f gate pre-acts [B,H,S]."""
+    B, S, w = u.shape
+    H = cfg.num_heads
+    hd = w // H
+    dt = u.dtype
+    q = (u @ params["wq"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (u @ params["wk"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    k = k / math.sqrt(hd)
+    v = (u @ params["wv"].astype(dt)).reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+    g = u.astype(jnp.float32) @ params["w_if"] + params["b_if"]   # [B,S,2H]
+    i_pre = g[..., :H].transpose(0, 2, 1)                         # [B,H,S]
+    f_pre = g[..., H:].transpose(0, 2, 1)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunkwise(params: dict, cfg: ModelConfig, u: jax.Array,
+                    state: MLstmState | None = None,
+                    chunk: int = 256) -> Tuple[jax.Array, MLstmState]:
+    """Chunkwise-parallel mLSTM. u: [B, S, w] -> ([B, S, w], final state)."""
+    B, S, w = u.shape
+    H = cfg.num_heads
+    hd = w // H
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, cfg, u)
+    logf = jax.nn.log_sigmoid(f_pre)                              # [B,H,S]
+
+    Lc = min(chunk, S)
+    S_orig = S
+    pad = (-S) % Lc
+    if pad:
+        # padded steps contribute nothing: i = -inf (no write), logf = 0
+        # (no decay), so the final state is exact.
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        i_pre = jnp.pad(i_pre, ((0, 0), (0, 0), (0, pad)),
+                        constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, 0), (0, pad)))
+        S = S + pad
+    nc = S // Lc
+
+    def reshape_c(x, trailing):
+        return x.reshape((B, H, nc, Lc) + trailing).transpose(
+            (2, 0, 1, 3) + tuple(range(4, 4 + len(trailing))))
+
+    qc = reshape_c(q.astype(jnp.float32), (hd,))   # [nc,B,H,Lc,hd]
+    kc = reshape_c(k.astype(jnp.float32), (hd,))
+    vc = reshape_c(v.astype(jnp.float32), (hd,))
+    ic = reshape_c(i_pre, ())                      # [nc,B,H,Lc]
+    fc = reshape_c(logf, ())
+
+    if state is None:
+        state = init_mlstm_state(cfg, B, w)
+
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+
+    # NOTE: unrolled python loop + per-chunk jax.checkpoint, NOT lax.scan —
+    # same rationale as layers.flash_attention (cost-analysis fidelity for
+    # the dry-run roofline + lean backward residuals).
+    def step(carry, inp):
+        C0, n0, m0 = carry
+        qq, kk, vv, ii, ff = inp
+        F = jnp.cumsum(ff, axis=-1)                               # [B,H,Lc]
+        A = m0[..., None] + F                                     # inter decay
+        # intra log-weights W[t,j] = F_t - F_j + i_j   (j <= t)
+        Wlog = F[..., :, None] - F[..., None, :] + ii[..., None, :]
+        Wlog = jnp.where(tri, Wlog, -jnp.inf)
+        m_t = jnp.maximum(A, jnp.max(Wlog, axis=-1))              # [B,H,Lc]
+        intra = jnp.exp(Wlog - m_t[..., None])                    # [B,H,Lc,Lc]
+        scores = jnp.einsum("bhtd,bhjd->bhtj", qq, kk) * intra
+        h_num = (jnp.einsum("bhtj,bhjd->bhtd", scores, vv)
+                 + jnp.exp(A - m_t)[..., None]
+                 * jnp.einsum("bhtd,bhde->bhte", qq, C0))
+        n_t = (jnp.sum(scores, axis=-1)
+               + jnp.exp(A - m_t) * jnp.einsum("bhtd,bhd->bht", qq, n0))
+        denom = jnp.maximum(jnp.abs(n_t), jnp.exp(-m_t))
+        h = h_num / denom[..., None]                              # [B,H,Lc,hd]
+        # state update to chunk end
+        FL = F[..., -1:]                                          # [B,H,1]
+        w_end = FL - F + ii                                       # [B,H,Lc]
+        m1 = jnp.maximum((m0[..., None] + FL)[..., 0],
+                         jnp.max(w_end, axis=-1))                 # [B,H]
+        upd = jnp.exp(w_end - m1[..., None])                      # [B,H,Lc]
+        C1 = (jnp.exp(m0 + FL[..., 0] - m1)[..., None, None] * C0
+              + jnp.einsum("bhj,bhjd,bhje->bhde", upd, kk, vv))
+        n1 = (jnp.exp(m0 + FL[..., 0] - m1)[..., None] * n0
+              + jnp.einsum("bhj,bhjd->bhd", upd, kk))
+        return (C1, n1, m1), h
+
+    remat_step = jax.checkpoint(step)
+    carry = (state.C, state.n, state.m)
+    hs_list = []
+    for c in range(nc):
+        carry, h_c = remat_step(
+            carry, (qc[c], kc[c], vc[c], ic[c], fc[c]))
+        hs_list.append(h_c)
+    (Cf, nf, mf) = carry
+    hs = jnp.stack(hs_list) if nc > 1 else hs_list[0][None]
+    # hs: [nc, B, H, Lc, hd] -> [B, S, w]
+    h = hs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, w).astype(u.dtype)
+    return h[:, :S_orig], MLstmState(C=Cf, n=nf, m=mf)
+
+
+def mlstm_step(params: dict, cfg: ModelConfig, u_t: jax.Array,
+               state: MLstmState) -> Tuple[jax.Array, MLstmState]:
+    """One-token recurrent mLSTM. u_t: [B, w]."""
+    B, w = u_t.shape
+    H = cfg.num_heads
+    hd = w // H
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(params, cfg, u_t[:, None, :])
+    q, k, v = q[:, :, 0], k[:, :, 0], v[:, :, 0]      # [B,H,hd]
+    i_pre, f_pre = i_pre[:, :, 0], f_pre[:, :, 0]     # [B,H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state.m, i_pre)
+    f_s = jnp.exp(logf + state.m - m_new)[..., None]
+    i_s = jnp.exp(i_pre - m_new)[..., None]
+    C = f_s[..., None] * state.C + i_s[..., None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    n = f_s * state.n + i_s * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)),
+        jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, w).astype(u_t.dtype)
+    return h, MLstmState(C=C, n=n, m=m_new)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, w: int) -> MLstmState:
+    H = cfg.num_heads
+    hd = w // H
+    return MLstmState(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32))
+
+
+def mlstm_block_apply(params: dict, cfg: ModelConfig, x: jax.Array,
+                      ) -> jax.Array:
+    dt = x.dtype
+    u = x @ params["w_up"].astype(dt)
+    gate = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    h, _ = mlstm_chunkwise(params, cfg, u, chunk=cfg.attn_chunk)
+    h = L.rmsnorm(params["norm"], h, cfg.norm_eps)
+    return (h * gate) @ params["w_down"].astype(dt)
+
+
+def mlstm_block_step(params: dict, cfg: ModelConfig, x_t: jax.Array,
+                     state: MLstmState) -> Tuple[jax.Array, MLstmState]:
+    dt = x_t.dtype
+    u = x_t @ params["w_up"].astype(dt)
+    gate = jax.nn.silu(x_t @ params["w_gate"].astype(dt))
+    h, new_state = mlstm_step(params, cfg, u, state)
+    h = L.rmsnorm(params["norm"], h, cfg.norm_eps)
+    return (h * gate) @ params["w_down"].astype(dt), new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLstmState(NamedTuple):
+    h: jax.Array   # [B, w]
+    c: jax.Array   # [B, w]
+    n: jax.Array   # [B, w]
+    m: jax.Array   # [B, w]
+
+
+def slstm_init(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = d
+    H = cfg.num_heads
+    hd = w // H
+    ks = jax.random.split(key, 5)
+    pdt = jnp.dtype(cfg.param_dtype)
+    ffd = (int(w * 4 / 3) + 7) // 8 * 8
+    return {
+        "w_x": L.dense_init(ks[0], d, 4 * w, pdt),
+        # block-diagonal recurrent weights, one [hd, 4*hd] block per head
+        "r_h": (jax.random.normal(ks[1], (H, hd, 4 * hd), jnp.float32)
+                / math.sqrt(hd)).astype(jnp.float32),
+        "bias": jnp.concatenate([
+            jnp.zeros((w,), jnp.float32), jnp.zeros((w,), jnp.float32),
+            3.0 * jnp.ones((w,), jnp.float32),
+            jnp.zeros((w,), jnp.float32)]),
+        "norm": L.rmsnorm_init(w, pdt),
+        "w_up1": L.dense_init(ks[2], w, ffd, pdt),
+        "w_up2": L.dense_init(ks[3], w, ffd, pdt),
+        "w_down": L.dense_init(ks[4], ffd, d, pdt),
+    }
+
+
+def _slstm_cell(params: dict, H: int, xw_t: jax.Array, st: SLstmState
+                ) -> SLstmState:
+    """xw_t: [B, 4w] precomputed input projection at step t (f32)."""
+    B, w4 = xw_t.shape
+    w = w4 // 4
+    hd = w // H
+    hb = st.h.reshape(B, H, hd)
+    rec = jnp.einsum("bhd,hde->bhe", hb, params["r_h"]).reshape(B, 4 * w)
+    pre = xw_t + rec + params["bias"]
+    z_pre, i_pre, f_pre, o_pre = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st.m, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(logf + st.m - m_new)
+    c = f_s * st.c + i_s * z
+    n = f_s * st.n + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLstmState(h=h, c=c, n=n, m=m_new)
+
+
+def slstm_scan(params: dict, cfg: ModelConfig, x: jax.Array,
+               state: SLstmState | None = None
+               ) -> Tuple[jax.Array, SLstmState]:
+    """x: [B, S, d] -> hidden sequence [B, S, w]. Strictly sequential."""
+    B, S, d = x.shape
+    w = d
+    H = cfg.num_heads
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    xw = (x @ params["w_x"].astype(x.dtype)).astype(jnp.float32)
+
+    def step(st, xw_t):
+        new = _slstm_cell(params, H, xw_t, st)
+        return new, new.h
+
+    final, hs = jax.lax.scan(step, state, xw.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(x.dtype), final
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLstmState:
+    w = cfg.d_model
+    z = jnp.zeros((batch, w), jnp.float32)
+    return SLstmState(h=z, c=z, n=z,
+                      m=jnp.full((batch, w), -1e30, jnp.float32))
+
+
+def slstm_block_apply(params: dict, cfg: ModelConfig, x: jax.Array
+                      ) -> jax.Array:
+    h, _ = slstm_scan(params, cfg, x)
+    h = L.rmsnorm(params["norm"], h, cfg.norm_eps)
+    dt = x.dtype
+    up = (h @ params["w_up1"].astype(dt)) * jax.nn.gelu(
+        h @ params["w_up2"].astype(dt))
+    return up @ params["w_down"].astype(dt)
+
+
+def slstm_block_step(params: dict, cfg: ModelConfig, x_t: jax.Array,
+                     state: SLstmState) -> Tuple[jax.Array, SLstmState]:
+    xw = (x_t @ params["w_x"].astype(x_t.dtype)).astype(jnp.float32)
+    new = _slstm_cell(params, cfg.num_heads, xw, state)
+    h = L.rmsnorm(params["norm"], new.h.astype(x_t.dtype), cfg.norm_eps)
+    dt = x_t.dtype
+    up = (h @ params["w_up1"].astype(dt)) * jax.nn.gelu(
+        h @ params["w_up2"].astype(dt))
+    return up @ params["w_down"].astype(dt), new

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules and collective helpers."""

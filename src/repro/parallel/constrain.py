@@ -1,0 +1,83 @@
+"""Activation sharding constraints (MaxText-style anchors).
+
+GSPMD propagation left to its own devices can resolve the FSDP weight
+sharding against batch-sharded activations by REPLICATING THE BATCH
+(observed: 19x per-device FLOP blow-up on the 16x16 mesh).  Pinning the
+activation layout at block boundaries forces the intended resolution:
+all-gather weights (cheap, overlappable), keep activations batch-sharded.
+
+`shard(x, *dims)` is a no-op outside a mesh context, so model code runs
+unchanged in single-device tests.  "batch" expands to ("pod","data") on
+multi-pod meshes.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _ambient_mesh():
+    try:
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+# Per-cell layout override (§Perf iteration A2): small models re-purpose
+# the `model` axis for data parallelism — set by launch/dryrun.py (and any
+# caller that knows the arch scale) before tracing.
+_BATCH_AXES_OVERRIDE = {"axes": None}
+
+
+def set_batch_axes(axes):
+    """axes: tuple of mesh axis names to use as the batch dim, or None for
+    the default (pod, data)."""
+    _BATCH_AXES_OVERRIDE["axes"] = axes
+
+
+def get_batch_axes(mesh):
+    if _BATCH_AXES_OVERRIDE["axes"] is not None:
+        return tuple(a for a in _BATCH_AXES_OVERRIDE["axes"]
+                     if a in mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard(x: jax.Array, *dims: str | None) -> jax.Array:
+    """Constrain x: dims are per-axis entries; "batch" -> pod+data axes,
+    "model" -> model axis, None -> unsharded."""
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = mesh.axis_names
+    batch = get_batch_axes(mesh) or None
+    model_taken = batch is not None and "model" in batch
+
+    def axis_size(a):
+        if a is None:
+            return 1
+        if isinstance(a, tuple):
+            import math
+            return math.prod(mesh.shape[x] for x in a)
+        return mesh.shape[a]
+
+    def resolve(d, size):
+        if d == "batch":
+            a = batch
+        elif d == "model":
+            # if the model axis is carrying batch (small-model DP layout),
+            # tensor dims must not claim it
+            a = "model" if ("model" in names and not model_taken) else None
+        else:
+            a = d
+        if a is None:
+            return None
+        # GSPMD pads uneven shards: acceptable when size >= axis (waste
+        # <= 1 shard, e.g. 56 heads on 16 -> 4/dev with slack), but
+        # catastrophic when size < axis (kv=1 on 16 idles 15/16) — drop.
+        return a if size >= axis_size(a) else None
+
+    spec = P(*[resolve(d, s) for d, s in zip(dims, x.shape)])
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

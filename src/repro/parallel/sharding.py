@@ -1,0 +1,210 @@
+"""Name-based sharding rules (t5x-style): param-tree paths -> PartitionSpec.
+
+Strategy (DESIGN.md §5):
+  * TP: attention heads / FFN hidden / experts / vocab on the `model` axis.
+  * FSDP/ZeRO-3: the contracting (d_model/ff-in) dim of every large matrix on
+    the `data` axis — params AND Adam moments are fully sharded, which is
+    what lets 34B-param train cells fit 16 GiB/chip (XLA all-gathers weights
+    per layer and reduce-scatters grads).
+  * `pod` composes with `data` for the batch; params are not sharded over
+    `pod` (weight all-gathers stay intra-pod; only grad reduction crosses).
+  * Scanned stacks carry a leading group axis -> rules key on trailing dims.
+
+Small / state-like leaves (norm scales, biases, RG-LRU gates, routers)
+replicate — sharding them buys nothing and costs collectives.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on "/"-joined path, spec for the LAST ndim dims of the leaf)
+_PARAM_RULES = [
+    # embeddings: vocab on model; d replicated (gather stays cheap)
+    (r"(^|/)unembed$",             P(None, "model")),
+    (r"(^|/)embed$",               P("model", None)),
+    # attention (leading scan-group axis handled by padding below)
+    (r"attn/w(q|k|v)$",            P("data", "model")),
+    (r"attn/wo$",                  P("model", "data")),
+    (r"cross/w(q|k|v)$",           P("data", "model")),
+    (r"cross/wo$",                 P("model", "data")),
+    # MLA
+    (r"attn/wq_down$",             P("data", None)),
+    (r"attn/wq_up$",               P(None, "model")),
+    (r"attn/wkv_down$",            P("data", None)),
+    (r"attn/w(k|v)_up$",           P(None, "model")),
+    # dense FFN
+    (r"ffn/w(i|g)$",               P("data", "model")),
+    (r"ffn/wo$",                   P("model", "data")),
+    (r"shared/w(i|g)$",            P("data", "model")),
+    (r"shared/wo$",                P("model", "data")),
+    # MoE: experts on model (EP), contracting dim on data (FSDP)
+    (r"moe/experts_w(i|g)$",       P("model", "data", None)),
+    (r"moe/experts_wo$",           P("model", None, "data")),
+    (r"moe/router$",               P("data", None)),
+    # RG-LRU
+    (r"rec/w_(gate|in)$",          P("data", "model")),
+    (r"rec/w_out$",                P("model", "data")),
+    (r"rec/conv_k$",               P(None, "model")),
+    (r"rec/(lam|gate_a|gate_x|bias_a|bias_x)$", P("model")),
+    # xLSTM (small models: replicate weights, shard batch only)
+    (r"cell/.*$",                  None),
+    # norms / everything else: replicate
+    (r".*$",                       None),
+]
+
+
+def _spec_for(path: str, ndim: int) -> P:
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path):
+            if spec is None:
+                return P()
+            pad = ndim - len(spec)
+            assert pad >= 0, f"{path}: rule {spec} too long for ndim {ndim}"
+            return P(*([None] * pad + list(spec)))
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+def param_specs(params: PyTree) -> PyTree:
+    """PartitionSpec tree matching `params`."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: _spec_for(_path_str(path), x.ndim), params)
+
+
+def param_shardings(mesh: Mesh, params: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params),
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def batch_axes(mesh: Mesh):
+    """The composite batch axis — ('pod','data') by default; small-model
+    cells override via constrain.set_batch_axes (DP-over-model layout)."""
+    from repro.parallel.constrain import get_batch_axes
+    return get_batch_axes(mesh)
+
+
+def choose_layout(mesh: Mesh, param_count: int, global_batch: int,
+                  small_model_threshold: int = 1_000_000_000):
+    """Pick batch axes for a cell.  Models small enough to replicate
+    (params + f32 Adam moments < ~10 GiB/chip) re-purpose the model axis
+    for DP when the batch divides — a 360M model on 256 chips wants DP=256,
+    not TP=16 (§Perf iteration A2).  Returns (batch_axes, replicate_params).
+    """
+    names = mesh.axis_names
+    if param_count <= small_model_threshold:
+        candidates = [("pod", "data", "model"), ("data", "model"),
+                      ("pod", "data"), ("data",)]
+        for cand in candidates:
+            axes = tuple(a for a in cand if a in names)
+            if not axes or set(axes) != set(cand) & set(names):
+                continue
+            import math
+            size = math.prod(mesh.shape[a] for a in axes)
+            if global_batch % size == 0 and "model" in axes:
+                return axes, True
+    return tuple(a for a in ("pod", "data") if a in names), False
+
+
+def replicated_param_specs(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda x: P(), params,
+                        is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def data_specs(mesh: Mesh, batch: PyTree) -> PyTree:
+    """Shard every batch leaf on its leading (batch) dim."""
+    b = batch_axes(mesh)
+    def spec(x):
+        return P(*( (b,) + (None,) * (x.ndim - 1) ))
+    return jax.tree.map(spec, batch)
+
+
+def cache_specs(mesh: Mesh, cache: PyTree) -> PyTree:
+    """Decode-cache sharding: leaves are [G, B, T, ...] — B on batch axes,
+    T (dim 2, when it is the long context axis) on `model`.  State-like
+    leaves [G, B, ...] shard B only.  `pos` scalar replicates."""
+    b = batch_axes(mesh)
+
+    def spec(path, x):
+        name = _path_str(path)
+        if name.endswith("pos"):
+            return P()
+        if x.ndim >= 4 and re.search(r"(k|v|ckv|krope|ck|cv)$", name):
+            # [G, B, T, ...]: shard T on model ONLY for genuinely long axes;
+            # ring buffers (W = window) and encoder K/V stay local.
+            t = x.shape[2]
+            t_spec = "model" if t >= 8192 else None
+            return P(*( (None, b, t_spec) + (None,) * (x.ndim - 3) ))
+        if x.ndim >= 2:
+            return P(*( (None, b) + (None,) * (x.ndim - 2) ))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        out = 1
+        for a in entry:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[entry]
+
+
+def sanitize_specs(mesh: Mesh, specs: PyTree, shapes: PyTree,
+                   allow_move: bool = True) -> PyTree:
+    """pjit in_shardings demand exact divisibility (unlike constraints).
+    Drop axes that don't divide their dim; if a dropped axis can move to a
+    sibling dim that divides and is unsharded, move it there (e.g.
+    minicpm3's vocab 73448 %16 != 0 -> shard d_model instead).
+    allow_move=False disables the move (fallback for cells where the moved
+    layout trips XLA partitioner bugs — launch/dryrun.py retries with it)."""
+
+    def fix(spec, shape):
+        if not isinstance(spec, P):
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        dropped = []
+        for i, (e, dim) in enumerate(zip(entries, shape)):
+            if e is not None and dim % _axis_size(mesh, e) != 0:
+                dropped.append(e)
+                entries[i] = None
+        if allow_move:
+            for e in dropped:
+                for i, (cur, dim) in enumerate(zip(entries, shape)):
+                    if cur is None and dim % _axis_size(mesh, e) == 0 \
+                            and dim >= _axis_size(mesh, e) \
+                            and e not in entries:
+                        entries[i] = e
+                        break
+        return P(*entries)
+
+    spec_flat, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda s: isinstance(s, P))
+    shape_flat = treedef.flatten_up_to(shapes)
+    fixed = [fix(s, x.shape) for s, x in zip(spec_flat, shape_flat)]
+    return jax.tree_util.tree_unflatten(treedef, fixed)

@@ -1,0 +1,2 @@
+"""Training substrate: optimizer, data pipeline, checkpointing, fault
+tolerance, gradient compression — all built in JAX (no optax/orbax)."""

@@ -1,0 +1,125 @@
+"""Checkpointing: atomic, mesh-agnostic, async-capable.
+
+Layout (one directory per step):
+    <dir>/step_000123.tmp/...   (write)
+    <dir>/step_000123/          (atomic rename on completion)
+        manifest.json           {step, leaf paths, shapes, dtypes}
+        <leaf_id>.npy           one file per pytree leaf (unsharded)
+
+Mesh-agnostic: leaves are gathered to host as full arrays and resharded on
+restore against whatever mesh the restarted job brings up — restarting
+512-chip training on 256 chips (elastic downscale) is just `restore()` with
+the new shardings.  Atomicity: the rename is the commit point; a crash
+mid-write leaves only a .tmp dir that `latest_step` ignores and `clean`
+removes.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+def _leaf_paths(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names = []
+    for path, _ in flat:
+        parts = []
+        for p in path:
+            parts.append(str(getattr(p, "key", getattr(p, "idx",
+                          getattr(p, "name", "?")))))
+        names.append("__".join(parts))
+    return names, [leaf for _, leaf in flat], treedef
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         async_: bool = False) -> threading.Thread | None:
+    """Write checkpoint for `step`. async_=True returns the writer thread
+    (device->host transfer happens synchronously; disk IO in background)."""
+    names, leaves, _ = _leaf_paths(tree)
+    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+
+    def write():
+        tmp = os.path.join(ckpt_dir, f"step_{step:08d}.tmp")
+        final = os.path.join(ckpt_dir, f"step_{step:08d}")
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": []}
+        for name, arr in zip(names, host_leaves):
+            np.save(os.path.join(tmp, name + ".npy"), arr)
+            manifest["leaves"].append(
+                {"name": name, "shape": list(arr.shape),
+                 "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                      # commit point
+
+    if async_:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m and os.path.exists(os.path.join(ckpt_dir, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Load `step` into the structure of `like`, placing each leaf with the
+    given shardings (or uncommitted host arrays if None)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    names, leaves, treedef = _leaf_paths(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for name, ref, shd in zip(names, leaves, shard_leaves):
+        arr = np.load(os.path.join(path, name + ".npy"))
+        assert arr.shape == tuple(ref.shape), \
+            f"{name}: ckpt {arr.shape} != model {ref.shape}"
+        if shd is not None:
+            out.append(jax.device_put(arr.astype(ref.dtype), shd))
+        else:
+            out.append(jax.device_put(arr.astype(ref.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def clean_incomplete(ckpt_dir: str) -> int:
+    """Remove .tmp dirs left by crashes. Returns count removed."""
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    n = 0
+    for d in os.listdir(ckpt_dir):
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, d))
+            n += 1
+    return n
+
+
+def keep_last(ckpt_dir: str, k: int) -> None:
+    """Retention policy: keep the newest k complete checkpoints."""
+    steps = []
+    for d in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", d)
+        if m:
+            steps.append(int(m.group(1)))
+    for s in sorted(steps)[:-k]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))

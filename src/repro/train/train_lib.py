@@ -1,0 +1,91 @@
+"""Train-step factory: loss + grad + AdamW under pjit, with optional
+microbatching (gradient accumulation) and gradient compression.
+
+The same factory serves three callers:
+  * launch/train.py        — the real training driver (CPU-scale runs)
+  * launch/dryrun.py       — .lower()/.compile() against the 512-chip mesh
+  * tests/test_training.py — convergence + checkpoint-resume tests
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.train import compress as GC
+from repro.train import optimizer as OPT
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: OPT.AdamState
+    # residuals live in the state only when compression is on (None is a
+    # static pytree-leaf-free marker)
+    compressor: Optional[GC.CompressorState]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OPT.OptimizerConfig = OPT.OptimizerConfig()
+    microbatches: int = 1          # grad accumulation steps per update
+    compress_grads: bool = False
+
+
+def init_state(cfg: ModelConfig, tcfg: TrainConfig,
+               key: jax.Array) -> TrainState:
+    params = T.init_params(cfg, key)
+    comp = GC.init_state(params) if tcfg.compress_grads else None
+    return TrainState(params=params, opt=OPT.init_state(params),
+                      compressor=comp)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig
+                    ) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    grad_fn = jax.value_and_grad(lambda p, b: T.loss_fn(cfg, p, b))
+
+    def accumulate(params, batch):
+        if tcfg.microbatches == 1:
+            return grad_fn(params, batch)
+        # split batch on the leading dim into microbatches, scan-accumulate
+        mb = tcfg.microbatches
+
+        def resh(x):
+            b = x.shape[0]
+            assert b % mb == 0, f"batch {b} % microbatches {mb} != 0"
+            return x.reshape((mb, b // mb) + x.shape[1:])
+
+        stacked = jax.tree.map(resh, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def body(carry, micro):
+            loss_acc, g_acc = carry
+            loss, g = grad_fn(params, micro)
+            g_acc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                                 g_acc, g)
+            return (loss_acc + loss, g_acc), None
+
+        (loss, grads), _ = jax.lax.scan(body, (0.0, zeros), stacked)
+        inv = 1.0 / mb
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        loss, grads = accumulate(state.params, batch)
+        comp_state = state.compressor
+        if tcfg.compress_grads:
+            vals, scales, comp_state = GC.compress(comp_state, grads)
+            grads = GC.decompress(vals, scales)
+        params, opt, metrics = OPT.apply_updates(
+            tcfg.opt, state.params, grads, state.opt)
+        metrics = {"loss": loss, **metrics}
+        return TrainState(params=params, opt=opt,
+                          compressor=comp_state), metrics
+
+    return train_step

@@ -1,0 +1,43 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+real (single) device; only launch/dryrun.py forces 512 host devices."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def bfv_params():
+    from repro.core.params import make_params
+    return make_params("test-bfv", mode="gadget")
+
+
+@pytest.fixture(scope="session")
+def bfv_keys(bfv_params):
+    from repro.core.keys import keygen
+    return keygen(bfv_params, jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="session")
+def paper_params():
+    from repro.core.params import make_params
+    return make_params("test-bfv", mode="paper")
+
+
+@pytest.fixture(scope="session")
+def paper_keys(paper_params):
+    from repro.core.keys import keygen
+    # weight=0 satisfies the paper's own correctness precondition exactly
+    return keygen(paper_params, jax.random.PRNGKey(42), paper_ecek_weight=0)
+
+
+@pytest.fixture(scope="session")
+def ckks_params():
+    from repro.core.params import make_params
+    return make_params("test-ckks", mode="gadget")
+
+
+@pytest.fixture(scope="session")
+def ckks_keys(ckks_params):
+    from repro.core.keys import keygen
+    return keygen(ckks_params, jax.random.PRNGKey(7))

@@ -1,0 +1,68 @@
+"""Baselines: Paillier substrate, HOPE comparisons, POPE interaction."""
+import pytest
+
+from repro.baselines import hope as HOPE
+from repro.baselines import paillier as P
+from repro.baselines import pope as POPE
+
+
+@pytest.fixture(scope="module")
+def paillier_keys():
+    return P.keygen(bits=512)     # small-but-real for test speed
+
+
+def test_paillier_roundtrip(paillier_keys):
+    pub, priv = paillier_keys
+    for m in (0, 1, 12345, pub.n - 1):
+        assert P.decrypt(priv, P.encrypt(pub, m)) == m % pub.n
+
+
+def test_paillier_additive_homomorphism(paillier_keys):
+    pub, priv = paillier_keys
+    a, b = 1234, 5678
+    ct = P.add(pub, P.encrypt(pub, a), P.encrypt(pub, b))
+    assert P.decrypt(priv, ct) == a + b
+
+
+def test_paillier_scalar_mul(paillier_keys):
+    pub, priv = paillier_keys
+    ct = P.cmul(pub, P.encrypt(pub, 111), 7)
+    assert P.decrypt(priv, ct) == 777
+
+
+def test_hope_compare():
+    ctx = HOPE.keygen(bits=512)
+    pairs = [(5, 3), (3, 5), (7, 7), (10**6, 1), (0, 10**6)]
+    for a, b in pairs:
+        out = HOPE.compare(ctx, HOPE.encrypt(ctx, a), HOPE.encrypt(ctx, b))
+        assert out == (a > b) - (a < b), (a, b, out)
+
+
+def test_hope_addition_then_compare():
+    ctx = HOPE.keygen(bits=512)
+    ct_sum = HOPE.add(ctx, HOPE.encrypt(ctx, 40), HOPE.encrypt(ctx, 2))
+    assert HOPE.compare(ctx, ct_sum, HOPE.encrypt(ctx, 41)) == 1
+
+
+def test_pope_compare_and_rounds():
+    client = POPE.PopeClient(bits=256)
+    tr = POPE.Transport(latency_s=0.0)
+    server = POPE.PopeServer(client, tr)
+    vals = [9, 2, 7, 1]
+    cts = [client.encrypt(v) for v in vals]
+    for c in cts:
+        server.insert(c)
+    assert server.compare(cts[0], cts[1]) == 1
+    assert tr.rounds > 0, "POPE must consume client round trips"
+
+
+def test_pope_range_query():
+    client = POPE.PopeClient(bits=256)
+    server = POPE.PopeServer(client, POPE.Transport(latency_s=0.0))
+    vals = [5, 17, 3, 99, 42, 8]
+    cts = {v: client.encrypt(v) for v in vals}
+    for v, c in cts.items():
+        server.insert(c)
+    got = server.range_query(client.encrypt(8), client.encrypt(50))
+    got_plain = sorted(POPE.P.decrypt(client.priv, c) for c in got)
+    assert got_plain == [8, 17, 42]

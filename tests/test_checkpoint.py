@@ -1,0 +1,65 @@
+"""Checkpointing: atomic commit, roundtrip, retention, async writer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as CKPT
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,), jnp.float32)},
+            "step": jnp.asarray(3, jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    CKPT.save(str(tmp_path), 3, tree)
+    assert CKPT.latest_step(str(tmp_path)) == 3
+    got = CKPT.restore(str(tmp_path), 3, jax.tree.map(jnp.zeros_like, tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save(tmp_path):
+    tree = _tree()
+    t = CKPT.save(str(tmp_path), 5, tree, async_=True)
+    t.join()
+    assert CKPT.latest_step(str(tmp_path)) == 5
+
+
+def test_incomplete_checkpoint_ignored_and_cleaned(tmp_path):
+    tree = _tree()
+    CKPT.save(str(tmp_path), 1, tree)
+    # simulate a crash mid-write: a .tmp dir without manifest commit
+    os.makedirs(tmp_path / "step_00000002.tmp")
+    assert CKPT.latest_step(str(tmp_path)) == 1
+    assert CKPT.clean_incomplete(str(tmp_path)) == 1
+    assert not (tmp_path / "step_00000002.tmp").exists()
+
+
+def test_keep_last(tmp_path):
+    tree = _tree()
+    for s in (1, 2, 3, 4):
+        CKPT.save(str(tmp_path), s, tree)
+    CKPT.keep_last(str(tmp_path), 2)
+    assert CKPT.latest_step(str(tmp_path)) == 4
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    CKPT.save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    with pytest.raises(AssertionError):
+        CKPT.restore(str(tmp_path), 1, {"w": jnp.zeros((5,))})
+
+
+def test_mesh_agnostic_dtype_cast(tmp_path):
+    """Restore casts to the target leaf dtype (elastic re-shard path)."""
+    CKPT.save(str(tmp_path), 1, {"w": jnp.ones((4,), jnp.float32)})
+    got = CKPT.restore(str(tmp_path), 1, {"w": jnp.zeros((4,), jnp.bfloat16)})
+    assert got["w"].dtype == jnp.bfloat16

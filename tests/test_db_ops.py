@@ -1,0 +1,76 @@
+"""Encrypted database operations: range query, bitonic sort, top-k."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+
+_CACHE = {}
+
+
+def _ks():
+    if "ks" not in _CACHE:
+        _CACHE["ks"] = keygen(make_params("test-bfv", mode="gadget"),
+                              jax.random.PRNGKey(1))
+    return _CACHE["ks"]
+
+
+def test_range_query_matches_plaintext():
+    ks = _ks()
+    vals = jnp.asarray([5, 17, 3, 99, 42, 8, 77, 23], jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(2))
+    lo = E.encrypt(ks, jnp.asarray(8), jax.random.PRNGKey(3))
+    hi = E.encrypt(ks, jnp.asarray(77), jax.random.PRNGKey(4))
+    mask = C.range_query(ks, col, lo, hi)
+    assert jnp.array_equal(mask, (vals >= 8) & (vals <= 77))
+
+
+def test_encrypted_sort_exact():
+    ks = _ks()
+    vals = jnp.asarray([9, 2, 7, 1, 14, 3, 8, 5], jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(5))
+    _, perm = C.encrypted_sort(ks, col)
+    assert jnp.array_equal(vals[perm], jnp.sort(vals))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=8, max_size=8,
+                unique=True))
+def test_encrypted_sort_property(values):
+    ks = _ks()
+    vals = jnp.asarray(values, jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(sum(values) % 1000))
+    _, perm = C.encrypted_sort(ks, col)
+    assert jnp.array_equal(vals[perm], jnp.sort(vals))
+    # perm is a permutation
+    assert jnp.array_equal(jnp.sort(perm), jnp.arange(8))
+
+
+def test_encrypted_topk():
+    ks = _ks()
+    vals = jnp.asarray([9, 2, 7, 1, 14, 3, 8, 5], jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(6))
+    _, idx = C.encrypted_topk(ks, col, 3)
+    assert set(np.asarray(vals[idx]).tolist()) == {14, 9, 8}
+
+
+def test_sort_requires_power_of_two():
+    ks = _ks()
+    vals = jnp.asarray([3, 1, 2], jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(7))
+    with pytest.raises(AssertionError):
+        C.encrypted_sort(ks, col)
+
+
+def test_sort_with_duplicates_is_stable_order():
+    """Duplicates (FAE coin flips) still yield a valid sorted sequence."""
+    ks = _ks()
+    vals = jnp.asarray([5, 5, 2, 9, 2, 5, 9, 1], jnp.int64)
+    col = E.encrypt(ks, vals, jax.random.PRNGKey(8))
+    _, perm = C.encrypted_sort(ks, col)
+    assert jnp.array_equal(vals[perm], jnp.sort(vals))

@@ -1,0 +1,144 @@
+"""HADES algorithm correctness: Alg. 1-2 contracts, noise budget, both CEK
+modes, hypothesis property sign(compare) == sign(m0 - m1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core import noise
+from repro.core.keys import keygen
+from repro.core.params import make_params
+
+
+def test_keygen_structure(bfv_params, bfv_keys):
+    ks = bfv_keys
+    K, n = bfv_params.num_towers, bfv_params.n
+    assert ks.pk0.shape == (K, n) and ks.pk1.shape == (K, n)
+    D = bfv_params.gadget_digits_per_tower
+    assert ks.cek_gadget.shape == (K, D, K, n)
+    # Alg.1 line 5: scale > max(2 B_e, ||sk||_inf)
+    assert bfv_params.scale > 2 * bfv_params.noise_bound
+    assert bfv_params.scale > 1
+
+
+def test_encrypt_decrypt_roundtrip(bfv_params, bfv_keys):
+    m = jnp.asarray([0, 1, -1, 50, -50, 100], jnp.int64)
+    ct = E.encrypt(bfv_keys, m, jax.random.PRNGKey(0))
+    assert jnp.array_equal(E.decrypt(bfv_keys, ct), m)
+
+
+def test_fresh_noise_within_budget(bfv_params, bfv_keys):
+    m = jnp.zeros((32,), jnp.int64)
+    ct = E.encrypt(bfv_keys, m, jax.random.PRNGKey(1))
+    mag = E.noise_magnitude(bfv_keys, ct, m)
+    budget = noise.predict(bfv_params)
+    assert float(jnp.max(mag)) < budget.fresh_worst
+    assert float(jnp.max(mag)) < bfv_params.delta_enc / 2   # decrypt-exact
+
+
+def test_compare_three_way(bfv_keys):
+    a = jnp.asarray([5, 3, 7, 0, -10, 100], jnp.int64)
+    b = jnp.asarray([3, 5, 7, 0, 50, -100], jnp.int64)
+    ct_a = E.encrypt(bfv_keys, a, jax.random.PRNGKey(2))
+    ct_b = E.encrypt(bfv_keys, b, jax.random.PRNGKey(3))
+    out = C.compare(bfv_keys, ct_a, ct_b)
+    assert jnp.array_equal(out, jnp.sign(a - b).astype(jnp.int32))
+
+
+def test_compare_adjacent_values(bfv_keys):
+    """|m0-m1| = 1 must still separate from equality (τ contract)."""
+    a = jnp.arange(-8, 8, dtype=jnp.int64)
+    ct_a = E.encrypt(bfv_keys, a, jax.random.PRNGKey(4))
+    ct_b = E.encrypt(bfv_keys, a + 1, jax.random.PRNGKey(5))
+    assert jnp.all(C.compare(bfv_keys, ct_a, ct_b) == -1)
+    assert jnp.all(C.compare(bfv_keys, ct_b, ct_a) == 1)
+    ct_c = E.encrypt(bfv_keys, a, jax.random.PRNGKey(6))
+    assert jnp.all(C.compare(bfv_keys, ct_a, ct_c) == 0)
+
+
+def test_paper_mode_with_precondition(paper_params, paper_keys):
+    """Literal Alg. 1-2 with the Thm 4.1 noise precondition enforced."""
+    a = jnp.asarray([5, 3, 7, 0], jnp.int64)
+    b = jnp.asarray([3, 5, 7, -2], jnp.int64)
+    ct_a = E.encrypt(paper_keys, a, jax.random.PRNGKey(2))
+    ct_b = E.encrypt(paper_keys, b, jax.random.PRNGKey(3))
+    out = C.compare(paper_keys, ct_a, ct_b)
+    assert jnp.array_equal(out, jnp.sign(a - b).astype(jnp.int32))
+
+
+def test_paper_mode_full_noise_breaks_correctness(paper_params):
+    """The §1.1 finding: literal U(-B_e,B_e)^n e_cek wraps mod q and
+    destroys the comparison — the paper's precondition is load-bearing."""
+    ks = keygen(paper_params, jax.random.PRNGKey(42),
+                paper_ecek_weight=None)      # full-density noise
+    a = jnp.arange(0, 64, dtype=jnp.int64)
+    b = a + 7
+    ct_a = E.encrypt(ks, a, jax.random.PRNGKey(2))
+    ct_b = E.encrypt(ks, b, jax.random.PRNGKey(3))
+    out = C.compare(ks, ct_a, ct_b)
+    errs = int(jnp.sum(out != -1))
+    assert errs > 16, f"expected broken comparisons, errs={errs}"
+
+
+def test_no_ciphertext_expansion(bfv_params, bfv_keys):
+    """Paper §3.4: comparison uses the existing 2-component ciphertext."""
+    m = jnp.asarray([1, 2], jnp.int64)
+    ct = E.encrypt(bfv_keys, m, jax.random.PRNGKey(0))
+    assert len(ct) == 2
+    assert ct.c0.shape == ct.c1.shape == \
+        (2, bfv_params.num_towers, bfv_params.n)
+
+
+def test_ckks_float_compare(ckks_params, ckks_keys):
+    a = jnp.asarray([1.5, 2.25, -3.75, 0.0])
+    b = jnp.asarray([1.25, 2.5, -3.5, 0.0])
+    ct_a = E.encrypt(ckks_keys, a, jax.random.PRNGKey(0))
+    ct_b = E.encrypt(ckks_keys, b, jax.random.PRNGKey(1))
+    out = C.compare(ckks_keys, ct_a, ct_b)
+    assert jnp.array_equal(out, jnp.asarray([1, -1, -1, 0], jnp.int32))
+    dec = E.decrypt(ckks_keys, ct_a)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(a), atol=1e-3)
+
+
+def test_noise_model_predicts_soundness(bfv_params):
+    assert noise.compare_is_sound(bfv_params)
+    b = noise.predict(bfv_params)
+    assert b.headroom_bits > 0
+
+
+# hypothesis can't take function-scoped fixtures — lazily built module keys
+_KEYS_H = {}
+
+
+def _keys_h():
+    if "ks" not in _KEYS_H:
+        _KEYS_H["ks"] = keygen(make_params("test-bfv", mode="gadget"),
+                               jax.random.PRNGKey(42))
+    return _KEYS_H["ks"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.integers(-500, 500), min_size=2, max_size=6),
+       st.integers(0, 2**30))
+def test_compare_sign_property(ms, seed):
+    ks = _keys_h()
+    a = jnp.asarray(ms, jnp.int64)
+    b = jnp.roll(a, 1)
+    ct_a = E.encrypt(ks, a, jax.random.PRNGKey(seed))
+    ct_b = E.encrypt(ks, b, jax.random.PRNGKey(seed + 1))
+    out = C.compare(ks, ct_a, ct_b)
+    assert jnp.array_equal(out, jnp.sign(a - b).astype(jnp.int32))
+
+
+def test_compare_range_limit(bfv_params, bfv_keys):
+    """Operands at the documented max_operand still compare correctly."""
+    lim = bfv_params.max_operand
+    a = jnp.asarray([lim, -lim], jnp.int64)
+    b = jnp.asarray([0, 0], jnp.int64)
+    ct_a = E.encrypt(bfv_keys, a, jax.random.PRNGKey(0))
+    ct_b = E.encrypt(bfv_keys, b, jax.random.PRNGKey(1))
+    assert jnp.array_equal(C.compare(bfv_keys, ct_a, ct_b),
+                           jnp.asarray([1, -1], jnp.int32))

@@ -1,0 +1,90 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step
+on CPU, output shapes + no NaNs (the assignment's smoke contract)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer as T
+
+
+def _batch(cfg, B=2, S=32, seed=1):
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed),
+                                          (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "patches":
+        batch["patches"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.num_patches, cfg.d_model))
+    if cfg.frontend == "frames":
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (B, cfg.encoder_seq, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = configs.get_reduced(arch)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = T.forward(cfg, params, batch)
+    assert logits.shape == (2, 32, cfg.vocab_size)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: T.loss_fn(cfg, p, batch))(params)
+    assert not bool(jnp.isnan(loss)) and float(loss) > 0
+    gn = jax.tree.reduce(
+        lambda a, b: a + b,
+        jax.tree.map(lambda g: jnp.sum(jnp.abs(g.astype(jnp.float32))),
+                     grads))
+    assert not bool(jnp.isnan(gn)) and float(gn) > 0
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_full_config_exact_assignment(arch):
+    """The full configs carry the exact assigned numbers."""
+    cfg = configs.get_config(arch)
+    expected = {
+        "llava_next_34b": (60, 7168, 56, 8, 20480, 64000),
+        "minitron_8b": (32, 4096, 32, 8, 16384, 256000),
+        "smollm_360m": (32, 960, 15, 5, 2560, 49152),
+        "minicpm3_4b": (62, 2560, 40, 40, 6400, 73448),
+        "internlm2_20b": (48, 6144, 48, 8, 16384, 92544),
+        "recurrentgemma_9b": (39, 4096, 16, 1, 12288, 256000),
+        "xlstm_125m": (12, 768, 4, 4, 0, 50304),
+        "deepseek_moe_16b": (28, 2048, 16, 16, 1408, 102400),
+        "qwen3_moe_30b_a3b": (48, 2048, 32, 4, 768, 151936),
+        "whisper_base": (6, 512, 8, 8, 2048, 51865),
+    }[configs.canon(arch)]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+
+
+def test_moe_active_params_less_than_total():
+    for arch in ("deepseek_moe_16b", "qwen3_moe_30b_a3b"):
+        cfg = configs.get_config(arch)
+        assert cfg.active_param_count() < cfg.param_count() / 3
+
+
+def test_param_counts_in_expected_band():
+    """Analytic N lands near each arch's nameplate size."""
+    bands = {"llava_next_34b": (30e9, 40e9), "minitron_8b": (8e9, 11e9),
+             "smollm_360m": (0.3e9, 0.5e9), "minicpm3_4b": (3.5e9, 5e9),
+             "internlm2_20b": (17e9, 23e9),
+             "recurrentgemma_9b": (8e9, 11e9),
+             "xlstm_125m": (0.08e9, 0.16e9),
+             "deepseek_moe_16b": (14e9, 19e9),
+             "qwen3_moe_30b_a3b": (27e9, 33e9),
+             "whisper_base": (0.05e9, 0.15e9)}
+    for arch, (lo, hi) in bands.items():
+        n = configs.get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_sub_quadratic_flags():
+    assert configs.get_config("recurrentgemma_9b").sub_quadratic
+    assert configs.get_config("xlstm_125m").sub_quadratic
+    for arch in ("llava_next_34b", "minitron_8b", "smollm_360m",
+                 "minicpm3_4b", "internlm2_20b", "deepseek_moe_16b",
+                 "qwen3_moe_30b_a3b", "whisper_base"):
+        assert not configs.get_config(arch).sub_quadratic, arch

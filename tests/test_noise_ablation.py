@@ -1,0 +1,47 @@
+"""The DESIGN.md §1.1 finding, quantified: paper-mode correctness vs
+e_cek density (the correctness/security tension of a 1-poly CEK)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compare as C
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+
+
+def _error_rate(weight, n_pairs=48):
+    params = make_params("test-bfv", mode="paper")
+    ks = keygen(params, jax.random.PRNGKey(0), paper_ecek_weight=weight)
+    a = jnp.arange(n_pairs, dtype=jnp.int64)
+    b = a + 5
+    ct_a = E.encrypt(ks, a, jax.random.PRNGKey(1))
+    ct_b = E.encrypt(ks, b, jax.random.PRNGKey(2))
+    out = np.asarray(C.compare(ks, ct_a, ct_b))
+    return float((out != -1).mean())
+
+
+def test_error_rate_grows_with_ecek_density():
+    r0 = _error_rate(0)
+    r_full = _error_rate(None if False else 256)   # full density (n=256)
+    assert r0 == 0.0
+    assert r_full > 0.3, r_full
+
+
+def test_single_nonzero_coefficient_already_hurts():
+    """Even ONE noise coefficient makes <e_cek, ctΔ1> wrap mod q —
+    the precondition effectively forces e_cek = 0."""
+    r1 = _error_rate(1)
+    assert r1 > 0.2, r1
+
+
+def test_gadget_mode_correct_at_full_noise():
+    """The beyond-paper gadget CEK: full-strength noise AND correct."""
+    params = make_params("test-bfv", mode="gadget")
+    ks = keygen(params, jax.random.PRNGKey(0))
+    a = jnp.arange(48, dtype=jnp.int64)
+    b = a + 5
+    ct_a = E.encrypt(ks, a, jax.random.PRNGKey(1))
+    ct_b = E.encrypt(ks, b, jax.random.PRNGKey(2))
+    out = np.asarray(C.compare(ks, ct_a, ct_b))
+    assert (out == -1).all()

@@ -1,0 +1,83 @@
+"""Ring arithmetic + NTT correctness (the kernels' mathematical ground)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ring as R
+from repro.core import sampling
+from repro.core.params import (make_params, ntt_primes, negacyclic_root,
+                               is_prime, PROFILES)
+
+
+@pytest.fixture(scope="module")
+def ring(bfv_params):
+    return R.make_ring(bfv_params)
+
+
+def test_ntt_primes_properties():
+    for n in (256, 1024, 4096):
+        for q in ntt_primes(n, 2):
+            assert is_prime(q)
+            assert q % (2 * n) == 1
+            assert q < 2**31
+            psi = negacyclic_root(q, n)
+            assert pow(psi, n, q) == q - 1
+            assert pow(psi, 2 * n, q) == 1
+
+
+def test_ntt_roundtrip(bfv_params, ring):
+    a = sampling.uniform_poly(bfv_params, jax.random.PRNGKey(0), (3,))
+    assert jnp.array_equal(R.intt(ring, R.ntt(ring, a)), a)
+
+
+def test_ntt_mul_matches_naive(bfv_params, ring):
+    a = sampling.uniform_poly(bfv_params, jax.random.PRNGKey(1))
+    b = sampling.uniform_poly(bfv_params, jax.random.PRNGKey(2))
+    fast = R.negacyclic_mul(ring, a, b)
+    slow = R.naive_negacyclic_mul(ring, a, b)
+    assert jnp.array_equal(fast, slow)
+
+
+def test_negacyclic_wraparound(bfv_params, ring):
+    """x^(n-1) * x = x^n = -1 in R_q."""
+    n, K = bfv_params.n, bfv_params.num_towers
+    a = jnp.zeros((K, n), jnp.int64).at[:, n - 1].set(1)
+    b = jnp.zeros((K, n), jnp.int64).at[:, 1].set(1)
+    out = R.negacyclic_mul(ring, a, b)
+    qs = np.asarray(bfv_params.qs)
+    expect = jnp.zeros((K, n), jnp.int64).at[:, 0].set(
+        jnp.asarray(qs - 1))
+    assert jnp.array_equal(out, expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(-2**40, 2**40))
+def test_crt_centered_roundtrip(v):
+    params = make_params("test-ckks", mode="gadget")   # 2 towers
+    res = jnp.asarray([[v % q for q in params.qs]], jnp.int64)
+    got = int(R.crt_centered(params, res)[0])
+    assert got == v, (got, v)
+
+
+def test_const_poly_embedding(bfv_params):
+    vals = jnp.asarray([0, 1, -1, 1000], jnp.int64)
+    p = R.const_poly(bfv_params, vals)
+    assert p.shape == (4, bfv_params.num_towers, bfv_params.n)
+    got = R.crt_centered(bfv_params, p[..., :, 0])
+    assert jnp.array_equal(got, vals)
+    assert int(jnp.sum(jnp.abs(p[..., 1:]))) == 0
+
+
+def test_ring_add_sub_inverse(bfv_params, ring):
+    a = sampling.uniform_poly(bfv_params, jax.random.PRNGKey(3))
+    b = sampling.uniform_poly(bfv_params, jax.random.PRNGKey(4))
+    assert jnp.array_equal(R.sub(ring, R.add(ring, a, b), b), a)
+
+
+def test_all_profiles_constructible():
+    for name in PROFILES:
+        p = make_params(name)
+        assert p.max_operand > 0, name
+        assert p.tau > 0

@@ -1,0 +1,94 @@
+"""Sharding rules + input specs for the dry-run cells."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.specs import SHAPES, cell_supported, input_specs
+from repro.models import transformer as T
+from repro.parallel import sharding as SH
+from repro.parallel.constrain import shard
+
+
+def test_param_rules_spot_checks():
+    cfg = configs.get_reduced("minitron_8b")
+    params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = SH.param_specs(params)
+    assert specs["embed"] == P("model", None)
+    assert specs["unembed"] == P(None, "model")
+    g = specs["groups"]["b0"]
+    assert g["attn"]["wq"] == P(None, "data", "model")
+    assert g["attn"]["wo"] == P(None, "model", "data")
+    assert g["ffn"]["wi"] == P(None, "data", "model")
+    assert g["ffn"]["wo"] == P(None, "model", "data")
+    assert g["ln1"]["scale"] == P()
+
+
+def test_moe_param_rules():
+    cfg = configs.get_reduced("qwen3_moe_30b_a3b")
+    params = jax.eval_shape(lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    g = SH.param_specs(params)["groups"]["b0"]
+    assert g["moe"]["experts_wi"] == P(None, "model", "data", None)
+    assert g["moe"]["experts_wo"] == P(None, "model", None, "data")
+    assert g["moe"]["router"] == P(None, "data", None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.zeros((4, 8))
+    y = shard(x, "batch", "model")
+    assert y.shape == x.shape     # and no error on a single device
+
+
+def test_constrain_drops_small_dims():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        x = jnp.zeros((4, 8))
+        y = shard(x, "batch", "model")
+        assert y.shape == x.shape
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_all_cells(arch, shape):
+    cfg = configs.get_config(arch)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        assert shape == "long_500k" and not cfg.sub_quadratic
+        assert why
+        return
+    spec = input_specs(cfg, shape)
+    meta = SHAPES[shape]
+    if spec["kind"] == "train":
+        state, batch = spec["args"]
+        assert batch["tokens"].shape == (meta["global_batch"],
+                                         meta["seq_len"])
+    elif spec["kind"] == "prefill":
+        _, batch = spec["args"]
+        assert batch["tokens"].shape == (meta["global_batch"],
+                                         meta["seq_len"])
+    else:
+        params, cache, token = spec["args"]
+        assert token.shape == (meta["global_batch"],)
+        # cache covers seq_len positions for attention archs
+        leaves = jax.tree.leaves(cache)
+        assert leaves, "empty cache specs"
+
+
+def test_skip_list_is_exactly_the_full_attention_archs():
+    skipped = [a for a in configs.ARCH_IDS
+               if not cell_supported(configs.get_config(a), "long_500k")[0]]
+    assert sorted(skipped) == sorted([
+        "llava_next_34b", "minitron_8b", "smollm_360m", "minicpm3_4b",
+        "internlm2_20b", "deepseek_moe_16b", "qwen3_moe_30b_a3b",
+        "whisper_base"])
+
+
+def test_40_cells_accounted():
+    total = len(configs.ARCH_IDS) * len(SHAPES)
+    assert total == 40
+    runnable = sum(
+        cell_supported(configs.get_config(a), s)[0]
+        for a in configs.ARCH_IDS for s in SHAPES)
+    assert runnable == 32    # 8 noted skips
