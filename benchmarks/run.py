@@ -6,8 +6,9 @@ Prints ``name,us_per_call,derived`` CSV.  Figures map 1:1 to the paper:
   fig3  real-world datasets (Bitcoin / Covid19 / hg38)
   fig4  protocol comparison (HADES vs HOPE vs POPE)
   table1  feature matrix (+ mechanical interaction checks)
-plus two framework benches: kernels (Pallas fused compare) and roofline
-(the dry-run derived table).
+plus three framework benches: kernels (Pallas fused compare), roofline
+(the dry-run derived table), and db_engine (the repro.db query engine:
+index build amortization, indexed vs. linear scans, batched serving).
 """
 from __future__ import annotations
 
@@ -19,7 +20,7 @@ from benchmarks import common
 
 def main() -> None:
     common.header()
-    from benchmarks import (fig1_bfv, fig2_ckks, fig3_datasets,
+    from benchmarks import (db_engine, fig1_bfv, fig2_ckks, fig3_datasets,
                             fig4_baselines, kernels_bench, roofline_report,
                             table1_features)
     suites = [
@@ -30,6 +31,7 @@ def main() -> None:
         ("table1", table1_features.run),
         ("kernels", kernels_bench.run),
         ("roofline", roofline_report.run),
+        ("db_engine", db_engine.run),
     ]
     failed = []
     for name, fn in suites:

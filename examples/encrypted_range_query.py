@@ -1,15 +1,27 @@
-"""Database-perspective demo: encrypted column -> range query, sort, top-k.
+"""Database-perspective demo: encrypted column -> range query, sort, top-k,
+then the same workload through the `repro.db` query engine on the full
+34,423-row hg38 dataset.
 
 The server never sees plaintext values — only HADES comparison outcomes.
 
     PYTHONPATH=src python examples/encrypted_range_query.py
+    PYTHONPATH=src python examples/encrypted_range_query.py \
+        --rows 0 --index-rows 8192        # 0 = full dataset
+
+Part 1 drives the raw core/compare.py primitives on a 64-row bitcoin
+slice (unchanged seed demo).  Part 2 builds a `repro.db.Table` over hg38,
+runs a fused And(Range, Eq) + TopK plan — every filter comparison in ONE
+batched Eval — and contrasts a linear-scan range query with the same
+query through a HADES sorted index (O(log n) encrypted binary search).
 """
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import db
 from repro.core import compare as C
 from repro.core import encrypt as E
 from repro.core.keys import keygen
@@ -17,11 +29,8 @@ from repro.core.params import make_params
 from repro.data import load_dataset
 
 
-def main():
-    params = make_params("test-bfv", mode="gadget")
-    ks = keygen(params, jax.random.PRNGKey(0))
-
-    # a slice of the paper's bitcoin dataset, reduced mod t
+def part1_primitives(ks, params):
+    """The raw comparator ops on a small bitcoin slice."""
     col_plain = load_dataset("bitcoin", scheme="bfv", t=params.t)[:64]
     # clamp into the comparable range of the small test profile
     col_plain = (col_plain % (params.max_operand // 2)).astype(np.int64)
@@ -29,7 +38,8 @@ def main():
     print(f"encrypted column: {col_plain.shape[0]} rows, "
           f"ct bytes/row = {2 * params.num_towers * params.n * 8}")
 
-    lo_v, hi_v = int(np.percentile(col_plain, 25)), int(np.percentile(col_plain, 75))
+    lo_v, hi_v = (int(np.percentile(col_plain, 25)),
+                  int(np.percentile(col_plain, 75)))
     ct_lo = E.encrypt(ks, jnp.asarray(lo_v), jax.random.PRNGKey(2))
     ct_hi = E.encrypt(ks, jnp.asarray(hi_v), jax.random.PRNGKey(3))
 
@@ -46,8 +56,85 @@ def main():
     print(f"encrypted bitonic sort: correct={ok} ({time.time()-t0:.2f}s)")
 
     _, idx = C.encrypted_topk(ks, column, 5)
-    print("top-5 (via encrypted compare):", sorted(col_plain[np.asarray(idx)]),
+    print("top-5 (via encrypted compare):",
+          sorted(col_plain[np.asarray(idx)]),
           " exact:", sorted(np.sort(col_plain)[-5:]))
+
+
+def part2_db_engine(ks, params, rows: int, index_rows: int):
+    """The repro.db engine over the hg38 genomic-coordinate dataset."""
+    vals = load_dataset("hg38", scheme="bfv", t=params.t).astype(np.int64)
+    if rows:
+        vals = vals[:rows]
+    rng = np.random.default_rng(0)
+    chrom = rng.integers(1, 23, len(vals))         # second encrypted column
+
+    print(f"\n--- repro.db on hg38 ({len(vals)} rows) ---")
+    t0 = time.time()
+    table = db.Table.from_arrays(ks, "hg38", {"pos": vals, "chrom": chrom},
+                                 jax.random.PRNGKey(10))
+    print(f"table: {table} ({table.ciphertext_bytes() / 1e6:.0f} MB ct, "
+          f"encrypted in {time.time()-t0:.1f}s)")
+
+    def enc(v, s):
+        return E.encrypt(ks, jnp.asarray(int(v)), jax.random.PRNGKey(s))
+
+    # fused plan: And(Range(pos), Eq(chrom)) + TopK — one Eval for the
+    # whole filter stage, regardless of how many predicates it holds
+    lo, hi = int(np.percentile(vals, 40)), int(np.percentile(vals, 60))
+    target_chrom = 7
+    query = db.Query(
+        where=db.And(db.Range("pos", enc(lo, 11), enc(hi, 12)),
+                     db.Eq("chrom", enc(target_chrom, 13))),
+        top_k=db.TopK("pos", 5))
+    t0 = time.time()
+    res = db.execute(ks, table, query)
+    want = (vals >= lo) & (vals <= hi) & (chrom == target_chrom)
+    want_top = sorted(vals[want].tolist(), reverse=True)[:5]
+    print(f"And(Range, Eq) + TopK: {int(want.sum())} matched, "
+          f"top-5 exact={vals[res.row_ids].tolist() == want_top} "
+          f"({time.time()-t0:.1f}s, {res.stats.eval_calls} fused Eval, "
+          f"{res.stats.filter_compares} compares)")
+
+    # index: build once on a prefix, then point lookups & range scans in
+    # O(log n) compares instead of a linear scan
+    n_idx = min(index_rows or len(vals), len(vals))
+    sub = db.Table.from_arrays(ks, "hg38_idx", {"pos": vals[:n_idx]},
+                               jax.random.PRNGKey(14))
+    t0 = time.time()
+    index = db.SortedIndex.build(ks, sub, "pos")
+    print(f"sorted index over {n_idx} rows: built in {time.time()-t0:.1f}s "
+          f"({index.build_compares} build compares, "
+          f"sorted_ok={bool((vals[:n_idx][index.perm] == np.sort(vals[:n_idx])).all())})")
+
+    q = db.Range("pos", enc(lo, 15), enc(hi, 16))
+    db.execute(ks, sub, q)                                  # warm jit
+    db.execute(ks, sub, q, indexes={"pos": index})
+    t0 = time.time()
+    lin = db.execute(ks, sub, q)
+    t_lin = time.time() - t0
+    t0 = time.time()
+    ind = db.execute(ks, sub, q, indexes={"pos": index})
+    t_ind = time.time() - t0
+    match = bool(np.array_equal(lin.mask, ind.mask))
+    print(f"range query: linear {t_lin:.2f}s "
+          f"({lin.stats.filter_compares} compares) vs indexed {t_ind:.2f}s "
+          f"({ind.stats.filter_compares} compares) — "
+          f"speedup {t_lin / t_ind:.1f}x, match={match}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=0,
+                    help="hg38 rows for the db demo (0 = all 34,423)")
+    ap.add_argument("--index-rows", type=int, default=4096,
+                    help="rows to index (0 = all; build is O(n log^2 n))")
+    args = ap.parse_args(argv)
+
+    params = make_params("test-bfv", mode="gadget")
+    ks = keygen(params, jax.random.PRNGKey(0))
+    part1_primitives(ks, params)
+    part2_db_engine(ks, params, args.rows, args.index_rows)
 
 
 if __name__ == "__main__":

@@ -11,22 +11,31 @@ Everything is batched: ciphertext components carry arbitrary leading batch
 dims, so a range query over 35k rows is ONE vectorized eval (paper §5.3's
 O(n) comparison claim — here it is also a single XLA program).
 
-Database ops built on the comparator:
-  * range_query     — membership mask for lo <= m <= hi
-  * encrypted_sort  — bitonic network (data-independent => jit/TPU friendly)
-  * encrypted_topk  — bitonic top-k
+Database ops built on the comparator (the primitives under `repro.db`):
+  * range_query     — membership mask for lo <= m <= hi (ONE fused eval)
+  * encrypted_sort  — bitonic network (data-independent => jit/TPU friendly);
+                      non-power-of-two columns are padded with encrypted
+                      sentinel rows that are stripped from the output
+  * encrypted_topk  — partial bitonic top-k network, O(n log^2 k) compares
 """
 from __future__ import annotations
 
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import encrypt as _E
 from repro.core import gadget
 from repro.core import ring as R
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
+
+# Fixed public-key randomness for server-side sentinel padding rows.  The
+# pad rows carry no secret (their value is the public +/-max_operand bound),
+# so a static key only fixes *which* valid encryption of the sentinel is
+# appended — callers that care can pass their own `pad_key`.
+_PAD_KEY_SEED = 0x4ADE5
 
 
 # ---------------------------------------------------------------------------
@@ -51,11 +60,15 @@ def eval_value(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
     return R.crt_centered(params, coeff0)
 
 
+def three_way(ks: KeySet, v: jax.Array) -> jax.Array:
+    """Alg. 2 line 5: eval value -> -1/0/+1 (τ-thresholded)."""
+    tau = ks.params.tau
+    return jnp.where(jnp.abs(v) < tau, 0, jnp.sign(v)).astype(jnp.int32)
+
+
 def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
     """Algorithm 2: three-way comparison -1/0/+1 (τ-thresholded)."""
-    v = eval_value(ks, ct0, ct1)
-    tau = ks.params.tau                                        # line 5
-    return jnp.where(jnp.abs(v) < tau, 0, jnp.sign(v)).astype(jnp.int32)
+    return three_way(ks, eval_value(ks, ct0, ct1))
 
 
 def compare_fae(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
@@ -80,21 +93,20 @@ def _gather_ct(ct: Ciphertext, idx: jax.Array) -> Ciphertext:
     return Ciphertext(ct.c0[idx], ct.c1[idx])
 
 
-def _broadcast_like(ct: Ciphertext, batch: int) -> Ciphertext:
-    return Ciphertext(
-        jnp.broadcast_to(ct.c0, (batch,) + ct.c0.shape[-2:]),
-        jnp.broadcast_to(ct.c1, (batch,) + ct.c1.shape[-2:]))
-
-
 def range_query(ks: KeySet, column: Ciphertext, ct_lo: Ciphertext,
                 ct_hi: Ciphertext) -> jax.Array:
-    """Mask of rows with lo <= m <= hi.  column: batched ct over N rows."""
-    n_rows = column.c0.shape[0]
-    lo = _broadcast_like(ct_lo, n_rows)
-    hi = _broadcast_like(ct_hi, n_rows)
-    ge_lo = compare(ks, column, lo) >= 0
-    le_hi = compare(ks, column, hi) <= 0
-    return ge_lo & le_hi
+    """Mask of rows with lo <= m <= hi.  column: batched ct over N rows.
+
+    Both bound comparisons run in ONE batched `eval_value` call: the bounds
+    are stacked into a [2, 1] batch that broadcasts against the column's
+    [N] rows, halving kernel launches on the hot path versus the naive
+    compare-vs-lo + compare-vs-hi pipeline.
+    """
+    bounds = Ciphertext(
+        jnp.stack([ct_lo.c0, ct_hi.c0])[:, None],    # [2, 1, K, n]
+        jnp.stack([ct_lo.c1, ct_hi.c1])[:, None])
+    cmp = three_way(ks, eval_value(ks, column, bounds))   # [2, N]
+    return (cmp[0] >= 0) & (cmp[1] <= 0)
 
 
 def _bitonic_pairs(n: int):
@@ -115,46 +127,191 @@ def _bitonic_pairs(n: int):
             yield (jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(asc))
 
 
+def bitonic_compare_count(n: int) -> int:
+    """Compare-exchanges the `encrypted_sort` network performs for an
+    n-row column (after its padding to 2^ceil(log2 n)).  Kept next to
+    `_bitonic_pairs` so stats/benchmark counts stay definitionally tied
+    to the network actually run."""
+    n_pad = 1 << max(0, (n - 1).bit_length())
+    stages = sum(range(1, n_pad.bit_length()))
+    return stages * (n_pad // 2)
+
+
+def _pad_to_pow2(ks: KeySet, column: Ciphertext, pad_value: int,
+                 pad_key: Optional[jax.Array]) -> Tuple[Ciphertext, int]:
+    """Append encrypted `pad_value` sentinel rows up to the next power of
+    two.  Returns (padded column, original row count)."""
+    n_rows = column.c0.shape[0]
+    n_pad = 1 << (n_rows - 1).bit_length()
+    if n_pad == n_rows:
+        return column, n_rows
+    key = pad_key if pad_key is not None else jax.random.PRNGKey(_PAD_KEY_SEED)
+    pad = _E.encrypt(ks, jnp.full((n_pad - n_rows,), pad_value, jnp.int64),
+                     key)
+    return Ciphertext(jnp.concatenate([column.c0, pad.c0]),
+                      jnp.concatenate([column.c1, pad.c1])), n_rows
+
+
+def _compare_swap(ks: KeySet, cmp: Callable, c0: jax.Array, c1: jax.Array,
+                  perm: jax.Array, lo: jax.Array, hi: jax.Array,
+                  asc: jax.Array):
+    """One batched compare-exchange stage over index pairs (lo[i], hi[i]).
+
+    asc[i] True  => the smaller plaintext lands at lo[i] (ascending pair);
+    asc[i] False => the larger lands at lo[i].  ONE batched Eval per call.
+    """
+    a = Ciphertext(c0[lo], c1[lo])
+    b = Ciphertext(c0[hi], c1[hi])
+    a_gt_b = cmp(ks, a, b)                                  # [pairs] bool
+    swap = jnp.where(asc, a_gt_b, ~a_gt_b)
+    sw = swap[:, None, None]
+    new_lo0 = jnp.where(sw, b.c0, a.c0)
+    new_lo1 = jnp.where(sw, b.c1, a.c1)
+    new_hi0 = jnp.where(sw, a.c0, b.c0)
+    new_hi1 = jnp.where(sw, a.c1, b.c1)
+    c0 = c0.at[lo].set(new_lo0).at[hi].set(new_hi0)
+    c1 = c1.at[lo].set(new_lo1).at[hi].set(new_hi1)
+    p_lo, p_hi = perm[lo], perm[hi]
+    perm = perm.at[lo].set(jnp.where(swap, p_hi, p_lo))
+    perm = perm.at[hi].set(jnp.where(swap, p_lo, p_hi))
+    return c0, c1, perm
+
+
 def encrypted_sort(ks: KeySet, column: Ciphertext,
-                   comparator: Callable | None = None,
+                   comparator: Callable | None = None, *,
+                   pad_value: Optional[int] = None,
+                   pad_key: Optional[jax.Array] = None,
                    ) -> Tuple[Ciphertext, jax.Array]:
     """Bitonic sort of a ciphertext column (ascending by plaintext).
 
     Returns (sorted ciphertexts, permutation).  The network is
     data-independent: each stage is ONE batched Eval over n/2 pairs —
     O(log^2 n) stages total, each embarrassingly parallel on the mesh.
+
+    Non-power-of-two columns are padded with encrypted `pad_value` sentinel
+    rows (default +max_operand//2: the compare path needs |value - sentinel|
+    <= max_operand, so the default assumes |values| <= max_operand/2 — the
+    regime every profile's datasets live in); the sentinels are stripped
+    from both returned arrays, so the output always has exactly the input's
+    row count.  Stripping selects by permutation id, not position, so real
+    rows that happen to *equal* the sentinel (FAE ties order coin-flip)
+    are still returned.  Callers with values above max_operand/2 should
+    pass their own in-headroom `pad_value`.
     """
     cmp = comparator or compare_fae
-    n_rows = column.c0.shape[0]
-    assert n_rows & (n_rows - 1) == 0, "pad column to a power of two"
-    perm = jnp.arange(n_rows)
+    if pad_value is None:
+        pad_value = ks.params.max_operand // 2
+    column, n_rows = _pad_to_pow2(ks, column, pad_value, pad_key)
+    n_padded = column.c0.shape[0]
+    perm = jnp.arange(n_padded)
     c0, c1 = column.c0, column.c1
-    for lo, hi, asc in _bitonic_pairs(n_rows):
-        a = Ciphertext(c0[lo], c1[lo])
-        b = Ciphertext(c0[hi], c1[hi])
-        a_gt_b = cmp(ks, a, b)
-        swap = jnp.where(asc, a_gt_b, ~a_gt_b)              # [pairs]
-        sw = swap[:, None, None]
-        new_lo0 = jnp.where(sw, b.c0, a.c0)
-        new_lo1 = jnp.where(sw, b.c1, a.c1)
-        new_hi0 = jnp.where(sw, a.c0, b.c0)
-        new_hi1 = jnp.where(sw, a.c1, b.c1)
-        c0 = c0.at[lo].set(new_lo0).at[hi].set(new_hi0)
-        c1 = c1.at[lo].set(new_lo1).at[hi].set(new_hi1)
-        p_lo, p_hi = perm[lo], perm[hi]
-        perm = perm.at[lo].set(jnp.where(swap, p_hi, p_lo))
-        perm = perm.at[hi].set(jnp.where(swap, p_lo, p_hi))
-    return Ciphertext(c0, c1), perm
+    for lo, hi, asc in _bitonic_pairs(n_padded):
+        c0, c1, perm = _compare_swap(ks, cmp, c0, c1, perm, lo, hi, asc)
+    if n_padded == n_rows:
+        return Ciphertext(c0, c1), perm
+    # real rows are the ones whose permutation id predates the padding;
+    # exactly n_rows of them exist, in sorted order
+    keep = jnp.nonzero(perm < n_rows, size=n_rows)[0]
+    return Ciphertext(c0[keep], c1[keep]), perm[keep]
+
+
+def _block_pairs(n_blocks: int, block: int, lo, hi, asc):
+    """Tile block-local pair indices across n_blocks contiguous blocks."""
+    import numpy as np
+    base = (np.arange(n_blocks) * block)[:, None]
+    glo = (base + np.asarray(lo)[None, :]).ravel()
+    ghi = (base + np.asarray(hi)[None, :]).ravel()
+    gasc = np.tile(np.asarray(asc), n_blocks)
+    return jnp.asarray(glo), jnp.asarray(ghi), jnp.asarray(gasc)
 
 
 def encrypted_topk(ks: KeySet, column: Ciphertext, k: int,
+                   comparator: Callable | None = None, *,
+                   pad_value: Optional[int] = None,
+                   pad_key: Optional[jax.Array] = None,
                    ) -> Tuple[Ciphertext, jax.Array]:
-    """Top-k by plaintext value (descending): sort + slice.
+    """Top-k by plaintext value (descending) via a partial bitonic top-k
+    network — O(n log^2 k) compares instead of the O(n log^2 n) full sort.
+
+    Tournament reduction (the standard GPU bitonic top-k):
+      1. sort each contiguous block of kp = 2^ceil(log2 k) rows descending;
+      2. max-merge block pairs: position i of block A against position
+         kp-1-i of block B keeps the larger at A — A then holds a bitonic
+         sequence containing the top-kp of A∪B;
+      3. bitonic-merge each surviving block back to sorted descending
+         (log kp stages), halve the block count, repeat.
+
+    Every stage is ONE batched Eval.  Non-power-of-two columns are padded
+    with encrypted `pad_value` sentinels (default -max_operand//2, losing
+    every tournament round while staying inside the |a-b| <= max_operand
+    compare headroom for |values| <= max_operand/2) which never reach the
+    result, since k <= n_rows real rows exist.  A real row that *equals*
+    the sentinel can tie its way out of the tournament (FAE coin flip);
+    that case is detected from the returned ids and resolved by falling
+    back to the tie-robust sort-based path.
 
     Used by the secure-serving example to pick the k best encrypted scores
     without the server learning the values.
     """
-    sorted_ct, perm = encrypted_sort(ks, column)
+    cmp = comparator or compare_fae
+    orig = column
     n_rows = column.c0.shape[0]
-    sel = jnp.arange(n_rows - 1, n_rows - 1 - k, -1)
+    k = min(k, n_rows)
+    kp = 1 << max(0, (k - 1).bit_length())          # power-of-two block
+    if pad_value is None:
+        pad_value = -(ks.params.max_operand // 2)
+    column, n_rows = _pad_to_pow2(ks, column, pad_value, pad_key)
+    n_padded = column.c0.shape[0]
+    if kp >= n_padded:
+        # degenerate: block covers everything — full sort is optimal
+        return _topk_via_sort(ks, orig, k, cmp, pad_key)
+
+    c0, c1 = column.c0, column.c1
+    perm = jnp.arange(n_padded)
+    # phase 1: sort every kp-block descending (flip the ascending flags of
+    # the standard network); all blocks ride in the same batched stages
+    for lo, hi, asc in _bitonic_pairs(kp):
+        glo, ghi, gasc = _block_pairs(n_padded // kp, kp, lo, hi, ~asc)
+        c0, c1, perm = _compare_swap(ks, cmp, c0, c1, perm, glo, ghi, gasc)
+    # phase 2: tournament of max-merges
+    n_live = n_padded
+    while n_live > kp:
+        blocks = n_live // kp
+        j = jnp.arange(blocks // 2)
+        i = jnp.arange(kp)
+        lo_idx = ((2 * j * kp)[:, None] + i[None, :]).ravel()
+        hi_idx = (((2 * j + 1) * kp)[:, None] + (kp - 1 - i)[None, :]).ravel()
+        keep_larger = jnp.zeros(lo_idx.shape[0], bool)      # asc=False
+        c0, c1, perm = _compare_swap(ks, cmp, c0, c1, perm,
+                                     lo_idx, hi_idx, keep_larger)
+        # compact surviving (even) blocks to the front
+        c0, c1, perm = c0[lo_idx], c1[lo_idx], perm[lo_idx]
+        n_live //= 2
+        # re-sort each bitonic survivor block descending: log kp merge stages
+        stride = kp // 2
+        while stride >= 1:
+            within = jnp.arange(kp)
+            p = within[(within & stride) == 0]               # [kp/2]
+            glo, ghi, gasc = _block_pairs(
+                n_live // kp, kp, p, p + stride,
+                jnp.zeros(p.shape[0], bool))
+            c0, c1, perm = _compare_swap(ks, cmp, c0, c1, perm,
+                                         glo, ghi, gasc)
+            stride //= 2
+    top_idx = perm[:k]
+    if bool(jnp.any(top_idx >= n_rows)):
+        # a real row equal to the sentinel lost a coin-flip tie and a pad
+        # row took its slot — rare; the sort path strips by id, not value
+        return _topk_via_sort(ks, orig, k, cmp, pad_key)
+    return Ciphertext(c0[:k], c1[:k]), top_idx
+
+
+def _topk_via_sort(ks: KeySet, column: Ciphertext, k: int, cmp: Callable,
+                   pad_key: Optional[jax.Array],
+                   ) -> Tuple[Ciphertext, jax.Array]:
+    """Tie-robust top-k: full ascending sort (id-based sentinel stripping)
+    then take the k largest, descending."""
+    sorted_ct, perm = encrypted_sort(ks, column, cmp, pad_key=pad_key)
+    n = column.c0.shape[0]
+    sel = jnp.arange(n - 1, n - 1 - k, -1)
     return _gather_ct(sorted_ct, sel), perm[sel]

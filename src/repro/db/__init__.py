@@ -1,0 +1,53 @@
+"""repro.db — the encrypted query engine over HADES comparisons.
+
+The paper's "database perspective" realized as a subsystem: encrypted
+column-store tables, HADES-sorted indexes with O(log n) encrypted binary
+search, a logical-plan IR whose executor fuses every comparison of a
+plan stage into one batched Eval, and a batched multi-query server.
+
+    Table        — named Ciphertext columns, rows padded to powers of two
+    SortedIndex  — built once via encrypted_sort; binary-search lookups
+    Range/Eq/And/Or/Not + OrderBy/TopK/Limit/Query — the plan IR
+    compile_plan / execute — lower + run a plan (indexes optional)
+    QueryServer  — K client queries against one table in one fused pass
+
+The comparison primitives themselves (range_query, encrypted_sort,
+encrypted_topk) live in core/compare.py and are re-exported here — the
+engine is a consumer of those ops, existing callers keep working.
+"""
+from repro.core.compare import (  # noqa: F401
+    encrypted_sort,
+    encrypted_topk,
+    range_query,
+)
+from repro.db.executor import (  # noqa: F401
+    ExecStats,
+    QueryResult,
+    execute,
+    fused_compare,
+)
+from repro.db.index import SortedIndex  # noqa: F401
+from repro.db.plan import (  # noqa: F401
+    And,
+    Atom,
+    CompiledPlan,
+    Eq,
+    Limit,
+    Not,
+    Or,
+    OrderBy,
+    Query,
+    Range,
+    TopK,
+    compile_plan,
+)
+from repro.db.table import Table  # noqa: F401
+
+
+def __getattr__(name):
+    # lazy: keeps `python -m repro.db.query_serve` free of the runpy
+    # double-import warning while preserving `db.QueryServer`
+    if name == "QueryServer":
+        from repro.db.query_serve import QueryServer
+        return QueryServer
+    raise AttributeError(name)

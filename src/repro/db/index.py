@@ -1,0 +1,128 @@
+"""HADES sorted index: build once, answer lookups in O(log n) compares.
+
+The index is built server-side with `encrypted_sort` — trapdoor (Alg. 4)
+comparisons only, the server never decrypts.  It stores the column's
+ciphertext rows in sorted order plus the permutation back to original row
+ids.  Lookups then run encrypted *binary search*: each probe is one
+HADES compare against a sorted row, so a point lookup or range boundary
+costs ceil(log2 n) compares instead of the linear scan's n.
+
+All searches are lane-batched: `search` takes B (value, strictness)
+lanes and resolves them together — every binary-search step is ONE
+batched Eval over B probes (a range query is 2 lanes; the multi-query
+server stacks 2K lanes for K clients).  The per-step compare is jitted
+once per lane count, so repeated queries pay only dispatch.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compare as C
+from repro.core.encrypt import Ciphertext
+from repro.core.keys import KeySet
+from repro.db.table import Table, rows_to_mask
+
+
+def _stack_cts(cts) -> Ciphertext:
+    return Ciphertext(jnp.stack([ct.c0 for ct in cts]),
+                      jnp.stack([ct.c1 for ct in cts]))
+
+
+class SortedIndex:
+    """Sorted ciphertext column + permutation, with encrypted binary search."""
+
+    def __init__(self, column: str, sorted_ct: Ciphertext, perm: np.ndarray,
+                 *, build_compares: int = 0):
+        self.column = column
+        self.sorted_ct = sorted_ct
+        self.perm = np.asarray(perm)
+        self.n_rows = int(self.perm.shape[0])
+        self.build_compares = build_compares
+        self.search_compares = 0               # cumulative probe count
+        self.last_probe_counts = np.zeros(0, np.int64)  # per-lane, last call
+        self._cmp: Optional[Callable] = None   # jitted Alg. 2, lazy
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, ks: KeySet, table: Table, column: str, *,
+              comparator: Optional[Callable] = None) -> "SortedIndex":
+        """Sort the column's valid rows once (server-side, O(n log^2 n)
+        trapdoor compares); amortized over every subsequent lookup."""
+        col = table.gather(column, np.arange(table.n_rows))
+        if comparator is None:
+            # jit once: every network stage reuses the same [pairs] shape
+            jitted = jax.jit(lambda a, b: C.compare_fae(ks, a, b))
+            comparator = lambda _ks, a, b: jitted(a, b)  # noqa: E731
+        sorted_ct, perm = C.encrypted_sort(ks, col, comparator)
+        return cls(column, sorted_ct, np.asarray(perm),
+                   build_compares=C.bitonic_compare_count(table.n_rows))
+
+    # -- search ------------------------------------------------------------
+
+    def _cmp3(self, ks: KeySet) -> Callable:
+        """Jitted 3-way compare (jit itself specializes per lane shape)."""
+        if self._cmp is None:
+            self._cmp = jax.jit(lambda a, b: C.compare(ks, a, b))
+        return self._cmp
+
+    def search(self, ks: KeySet, values: Ciphertext,
+               strict: np.ndarray) -> np.ndarray:
+        """Batched boundary search over B lanes.
+
+        values: ciphertexts with leading batch dim B (EncBasic trapdoors).
+        strict[i] False -> lower bound: first sorted pos with col >= v_i;
+        strict[i] True  -> upper bound: first sorted pos with col >  v_i.
+        Every iteration is ONE batched Eval over the B probe lanes.
+        """
+        strict = np.asarray(strict, bool)
+        B = values.c0.shape[0]
+        assert strict.shape == (B,)
+        cmp3 = self._cmp3(ks)
+        lo = np.zeros(B, np.int64)
+        hi = np.full(B, self.n_rows, np.int64)
+        probes = np.zeros(B, np.int64)
+        while np.any(lo < hi):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            probe = np.where(active, mid, 0)       # fixed shape; dead lanes
+            rows = Ciphertext(self.sorted_ct.c0[probe],
+                              self.sorted_ct.c1[probe])
+            c = np.asarray(cmp3(rows, values))     # [B] in {-1, 0, +1}
+            probes += active
+            go_left = np.where(strict, c > 0, c >= 0)
+            hi = np.where(active & go_left, mid, hi)
+            lo = np.where(active & ~go_left, mid + 1, lo)
+        self.search_compares += int(probes.sum())
+        self.last_probe_counts = probes            # per-lane attribution
+        return lo
+
+    def search_range(self, ks: KeySet, ct_lo: Ciphertext,
+                     ct_hi: Ciphertext) -> np.ndarray:
+        """Row ids with lo <= value <= hi — 2 lanes, ~2 log2 n compares."""
+        bounds = _stack_cts([ct_lo, ct_hi])
+        l, r = self.search(ks, bounds, np.array([False, True]))
+        return self.perm[l:r]
+
+    def point_lookup(self, ks: KeySet, ct_value: Ciphertext) -> np.ndarray:
+        """Row ids with value == v (duplicates included) — 2 lanes."""
+        bounds = _stack_cts([ct_value, ct_value])
+        l, r = self.search(ks, bounds, np.array([False, True]))
+        return self.perm[l:r]
+
+    def mask_range(self, ks: KeySet, ct_lo: Ciphertext, ct_hi: Ciphertext,
+                   n_padded: int) -> np.ndarray:
+        """search_range as a [n_padded] bool row mask (executor plumbing)."""
+        return rows_to_mask(self.search_range(ks, ct_lo, ct_hi), n_padded)
+
+    def mask_eq(self, ks: KeySet, ct_value: Ciphertext,
+                n_padded: int) -> np.ndarray:
+        return rows_to_mask(self.point_lookup(ks, ct_value), n_padded)
+
+    def __repr__(self) -> str:
+        return (f"SortedIndex({self.column!r}, rows={self.n_rows}, "
+                f"build_compares={self.build_compares})")

@@ -1,0 +1,186 @@
+"""Logical query plan IR for the `repro.db` encrypted query engine.
+
+A query against an encrypted `Table` is a small tree of predicate nodes
+over named columns plus optional ordering / truncation stages:
+
+    predicates : Range(col, ct_lo, ct_hi) | Eq(col, ct_value)
+                 And(...) | Or(...) | Not(p)
+    stages     : OrderBy(col, descending) | TopK(col, k) | Limit(count)
+
+Predicate *constants* are client-encrypted `Ciphertext` trapdoors — the
+server combines HADES comparison outcomes but never sees a plaintext
+bound.  `compile_plan` lowers a `Query` to a `CompiledPlan`: the deduped
+list of comparison leaves plus a boolean combination tree over leaf
+indices.  The executor then resolves every leaf either through a
+`SortedIndex` (O(log n) compares) or through one fused linear scan — all
+scan comparisons of a plan stage ride in a single batched `eval_value`
+call (one XLA program per stage, Mazzone et al.'s batched-comparison
+lesson applied to query plans).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+from repro.core.encrypt import Ciphertext
+
+
+class Predicate:
+    """Base class for filter-tree nodes."""
+
+    def __and__(self, other: "Predicate") -> "And":
+        return And(self, other)
+
+    def __or__(self, other: "Predicate") -> "Or":
+        return Or(self, other)
+
+    def __invert__(self) -> "Not":
+        return Not(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Range(Predicate):
+    """lo <= column <= hi (both bounds encrypted, inclusive)."""
+    column: str
+    lo: Ciphertext
+    hi: Ciphertext
+
+
+@dataclasses.dataclass(frozen=True)
+class Eq(Predicate):
+    """column == value (encrypted; requires EncBasic operands — FAE
+    deliberately obfuscates equality, Alg. 3)."""
+    column: str
+    value: Ciphertext
+
+
+class And(Predicate):
+    def __init__(self, *children: Predicate):
+        self.children: Tuple[Predicate, ...] = tuple(children)
+
+    def __repr__(self) -> str:
+        return f"And{self.children!r}"
+
+
+class Or(Predicate):
+    def __init__(self, *children: Predicate):
+        self.children: Tuple[Predicate, ...] = tuple(children)
+
+    def __repr__(self) -> str:
+        return f"Or{self.children!r}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Predicate):
+    child: Predicate
+
+
+@dataclasses.dataclass(frozen=True)
+class OrderBy:
+    column: str
+    descending: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    column: str
+    k: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Limit:
+    count: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """A complete logical plan: filter -> order/top-k -> limit -> project.
+
+    `select` names the columns whose ciphertexts the result should carry
+    (row ids are always returned; gathering ciphertexts is optional).
+    """
+    where: Optional[Predicate] = None
+    order_by: Optional[OrderBy] = None
+    top_k: Optional[TopK] = None
+    limit: Optional[Union[Limit, int]] = None
+    select: Tuple[str, ...] = ()
+
+    @property
+    def limit_count(self) -> Optional[int]:
+        if self.limit is None:
+            return None
+        return self.limit.count if isinstance(self.limit, Limit) else int(self.limit)
+
+
+# ---------------------------------------------------------------------------
+# compilation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Atom:
+    """One scan comparison: satisfied iff compare(column_row, value) op 0."""
+    column: str
+    op: str                    # ">=", "<=", "=="
+    value: Ciphertext
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """Lowered plan: deduped comparison leaves + boolean tree over them.
+
+    tree grammar: ("leaf", i) | ("and", [t..]) | ("or", [t..]) | ("not", t)
+    leaves[i] is a Range or Eq node.  `None` tree = select-all.
+    """
+    query: Query
+    leaves: list
+    tree: Optional[tuple]
+
+    @property
+    def num_leaves(self) -> int:
+        return len(self.leaves)
+
+    def scan_atoms(self, leaf_idx: int) -> Tuple[Atom, ...]:
+        """The linear-scan comparisons leaf `leaf_idx` lowers to."""
+        leaf = self.leaves[leaf_idx]
+        if isinstance(leaf, Range):
+            return (Atom(leaf.column, ">=", leaf.lo),
+                    Atom(leaf.column, "<=", leaf.hi))
+        return (Atom(leaf.column, "==", leaf.value),)
+
+
+def _leaf_key(leaf: Predicate) -> tuple:
+    """Structural identity for dedup: same column + same trapdoor arrays."""
+    if isinstance(leaf, Range):
+        return ("range", leaf.column, id(leaf.lo.c0), id(leaf.hi.c0))
+    return ("eq", leaf.column, id(leaf.value.c0))
+
+
+def compile_plan(query: Union[Query, Predicate]) -> CompiledPlan:
+    """Lower a Query (or bare predicate) to a CompiledPlan.
+
+    Duplicate leaves (same column, same trapdoor ciphertexts) collapse to
+    one comparison — e.g. Or(And(Range(a), Eq(b)), And(Range(a), Eq(c)))
+    evaluates Range(a) once.
+    """
+    if isinstance(query, Predicate):
+        query = Query(where=query)
+    leaves: list = []
+    seen: dict = {}
+
+    def walk(p: Predicate) -> tuple:
+        if isinstance(p, (Range, Eq)):
+            key = _leaf_key(p)
+            if key not in seen:
+                seen[key] = len(leaves)
+                leaves.append(p)
+            return ("leaf", seen[key])
+        if isinstance(p, And):
+            return ("and", [walk(c) for c in p.children])
+        if isinstance(p, Or):
+            return ("or", [walk(c) for c in p.children])
+        if isinstance(p, Not):
+            return ("not", walk(p.child))
+        raise TypeError(f"unknown predicate node: {p!r}")
+
+    tree = walk(query.where) if query.where is not None else None
+    return CompiledPlan(query=query, leaves=leaves, tree=tree)

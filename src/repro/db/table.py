@@ -1,0 +1,121 @@
+"""Encrypted column-store `Table` for the repro.db engine.
+
+A table owns named `Ciphertext` columns over the same logical rows.  Rows
+are padded to the next power of two at ingest (static shapes: every
+downstream sort/merge network and fused scan compiles once per table
+size), with a host-side validity mask excluding the pad rows from query
+results.  The pad rows are real encryptions of 0 — the server cannot
+distinguish them from data rows by inspection, only the table's public
+row count reveals the split.
+
+Encryption is batched: one `encrypt` call per column, regardless of row
+count (the vectorized LPR path in core/encrypt.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encrypt as E
+from repro.core.encrypt import Ciphertext
+from repro.core.keys import KeySet
+
+
+def rows_to_mask(rows, n_padded: int) -> np.ndarray:
+    """Row-id list -> [n_padded] bool mask (shared by index + executor +
+    server so mask construction has exactly one implementation)."""
+    mask = np.zeros(n_padded, bool)
+    mask[np.asarray(rows, dtype=np.int64)] = True
+    return mask
+
+
+class Table:
+    """Named encrypted columns + row-count bookkeeping."""
+
+    def __init__(self, name: str, columns: Dict[str, Ciphertext],
+                 n_rows: int):
+        if not columns:
+            raise ValueError("table needs at least one column")
+        shapes = {c: ct.c0.shape[0] for c, ct in columns.items()}
+        n_padded = next(iter(shapes.values()))
+        if any(v != n_padded for v in shapes.values()):
+            raise ValueError(f"ragged columns: {shapes}")
+        if n_padded & (n_padded - 1):
+            raise ValueError(f"padded row count {n_padded} not a power of two")
+        if not (0 < n_rows <= n_padded):
+            raise ValueError(f"n_rows {n_rows} outside (0, {n_padded}]")
+        self.name = name
+        self.columns = dict(columns)
+        self.n_rows = int(n_rows)
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_arrays(cls, ks: KeySet, name: str,
+                    data: Dict[str, np.ndarray], key: jax.Array, *,
+                    fae: bool = False) -> "Table":
+        """Encrypt host arrays into a padded column-store.
+
+        data: {column: [n_rows] int (bfv) or float (ckks)}.  `fae=True`
+        uses perturbation-aware encryption (Alg. 3) — note this trades
+        away exact Eq/point-lookup semantics by design.
+        """
+        lengths = {c: len(v) for c, v in data.items()}
+        n_rows = next(iter(lengths.values()))
+        if any(v != n_rows for v in lengths.values()):
+            raise ValueError(f"ragged input columns: {lengths}")
+        n_padded = 1 << (n_rows - 1).bit_length()
+        enc = E.encrypt_fae if fae else E.encrypt
+        is_float = ks.params.profile.scheme == "ckks"
+        columns = {}
+        for i, (cname, arr) in enumerate(data.items()):
+            arr = np.asarray(arr)
+            padded = np.zeros((n_padded,),
+                              np.float64 if is_float else np.int64)
+            padded[:n_rows] = arr
+            columns[cname] = enc(ks, jnp.asarray(padded),
+                                 jax.random.fold_in(key, i))
+        return cls(name, columns, n_rows)
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def n_padded(self) -> int:
+        return next(iter(self.columns.values())).c0.shape[0]
+
+    @property
+    def valid(self) -> np.ndarray:
+        """[n_padded] bool — True on data rows, False on pad rows."""
+        return np.arange(self.n_padded) < self.n_rows
+
+    @property
+    def column_names(self) -> tuple:
+        return tuple(self.columns)
+
+    def ciphertext_bytes(self) -> int:
+        """Storage footprint of all encrypted columns."""
+        return sum(ct.c0.nbytes + ct.c1.nbytes for ct in self.columns.values())
+
+    # -- access ------------------------------------------------------------
+
+    def column(self, name: str) -> Ciphertext:
+        return self.columns[name]
+
+    def gather(self, name: str, rows: Iterable[int]) -> Ciphertext:
+        """Ciphertext rows of `name` at host-side row indices."""
+        idx = np.asarray(rows, dtype=np.int64)
+        ct = self.columns[name]
+        return Ciphertext(ct.c0[idx], ct.c1[idx])
+
+    def decrypt_column(self, ks: KeySet, name: str, *,
+                       include_padding: bool = False) -> np.ndarray:
+        """Client-side helper (tests / verification only — needs sk)."""
+        vals = np.asarray(E.decrypt(ks, self.columns[name]))
+        return vals if include_padding else vals[:self.n_rows]
+
+    def __repr__(self) -> str:
+        return (f"Table({self.name!r}, rows={self.n_rows}"
+                f" (padded {self.n_padded}), cols={list(self.columns)})")

@@ -1,0 +1,263 @@
+"""repro.db engine: plan IR, fused executor, sorted index, batched serving.
+
+All assertions compare against the plaintext answer — the engine must be
+*exact* on BFV integer columns.  Dataset slices keep CI time bounded; the
+full-row runs live in benchmarks/db_engine.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import db
+from repro.core import encrypt as E
+from repro.core.keys import keygen
+from repro.core.params import make_params
+from repro.data import DATASETS, load_dataset
+
+_CACHE = {}
+
+
+def _ks():
+    if "ks" not in _CACHE:
+        _CACHE["ks"] = keygen(make_params("test-bfv", mode="gadget"),
+                              jax.random.PRNGKey(3))
+    return _CACHE["ks"]
+
+
+def _enc(ks, v, seed):
+    return E.encrypt(ks, jnp.asarray(int(v)), jax.random.PRNGKey(seed))
+
+
+def _dataset_rows(name, n_rows):
+    ks = _ks()
+    vals = load_dataset(name, scheme="bfv", t=ks.params.t)[:n_rows]
+    return vals.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# plan construction / compilation
+# ---------------------------------------------------------------------------
+
+def test_plan_compile_structure():
+    ks = _ks()
+    r = db.Range("v", _enc(ks, 10, 0), _enc(ks, 20, 1))
+    e = db.Eq("s", _enc(ks, 5, 2))
+    plan = db.compile_plan(db.Query(where=db.And(r, e)))
+    assert plan.num_leaves == 2
+    assert plan.tree == ("and", [("leaf", 0), ("leaf", 1)])
+    # Range lowers to 2 scan atoms, Eq to 1
+    assert [a.op for a in plan.scan_atoms(0)] == [">=", "<="]
+    assert [a.op for a in plan.scan_atoms(1)] == ["=="]
+
+
+def test_plan_compile_dedups_repeated_leaves():
+    ks = _ks()
+    r = db.Range("v", _enc(ks, 10, 0), _enc(ks, 20, 1))
+    e1 = db.Eq("s", _enc(ks, 5, 2))
+    e2 = db.Eq("s", _enc(ks, 6, 3))
+    # r appears twice but compiles to ONE leaf
+    plan = db.compile_plan(db.Or(db.And(r, e1), db.And(r, e2)))
+    assert plan.num_leaves == 3
+    assert plan.tree == ("or", [("and", [("leaf", 0), ("leaf", 1)]),
+                                ("and", [("leaf", 0), ("leaf", 2)])])
+
+
+def test_predicate_operator_sugar():
+    ks = _ks()
+    r = db.Range("v", _enc(ks, 10, 0), _enc(ks, 20, 1))
+    e = db.Eq("v", _enc(ks, 5, 2))
+    assert isinstance(r & e, db.And)
+    assert isinstance(r | e, db.Or)
+    assert isinstance(~r, db.Not)
+
+
+def test_bare_predicate_compiles_to_query():
+    ks = _ks()
+    plan = db.compile_plan(db.Eq("v", _enc(ks, 5, 0)))
+    assert plan.num_leaves == 1 and plan.tree == ("leaf", 0)
+    assert plan.query.where is not None
+
+
+# ---------------------------------------------------------------------------
+# table
+# ---------------------------------------------------------------------------
+
+def test_table_pads_to_power_of_two_and_roundtrips():
+    ks = _ks()
+    vals = np.arange(50, dtype=np.int64)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(0))
+    assert t.n_rows == 50 and t.n_padded == 64
+    assert t.valid.sum() == 50
+    np.testing.assert_array_equal(t.decrypt_column(ks, "v"), vals)
+    # pad rows are genuine encryptions of 0
+    full = t.decrypt_column(ks, "v", include_padding=True)
+    assert (full[50:] == 0).all()
+
+
+def test_table_rejects_ragged_columns():
+    ks = _ks()
+    with pytest.raises(ValueError):
+        db.Table.from_arrays(ks, "t", {"a": np.arange(4), "b": np.arange(5)},
+                             jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# executor: fused linear scan
+# ---------------------------------------------------------------------------
+
+def test_multi_predicate_and_or_matches_plaintext():
+    ks = _ks()
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 200, 60)
+    score = rng.integers(0, 200, 60)
+    t = db.Table.from_arrays(ks, "t", {"v": vals, "s": score},
+                             jax.random.PRNGKey(1))
+    q = db.Or(db.And(db.Range("v", _enc(ks, 40, 0), _enc(ks, 120, 1)),
+                     db.Range("s", _enc(ks, 0, 2), _enc(ks, 100, 3))),
+              db.Not(db.Range("v", _enc(ks, 0, 4), _enc(ks, 150, 5))))
+    res = db.execute(ks, t, q)
+    want = (((vals >= 40) & (vals <= 120) & (score <= 100))
+            | ~((vals >= 0) & (vals <= 150)))
+    np.testing.assert_array_equal(res.mask, want)
+    # the whole 3-leaf predicate tree ran as ONE fused Eval
+    assert res.stats.eval_calls == 1
+    assert res.stats.scan_leaves == 3
+
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_end_to_end_query_matches_plaintext(name):
+    """And(Range, Eq) + TopK — exact on a slice of each paper dataset."""
+    ks = _ks()
+    vals = _dataset_rows(name, 96)
+    rng = np.random.default_rng(2)
+    aux = rng.integers(0, 250, len(vals))
+    t = db.Table.from_arrays(ks, name, {"v": vals, "aux": aux},
+                             jax.random.PRNGKey(2))
+    lo, hi = int(np.percentile(vals, 20)), int(np.percentile(vals, 80))
+    eq_v = int(aux[0])
+    q = db.Query(
+        where=db.And(db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)),
+                     db.Eq("aux", _enc(ks, eq_v, 2))),
+        top_k=db.TopK("v", 3), select=("v",))
+    res = db.execute(ks, t, q)
+    want_mask = (vals >= lo) & (vals <= hi) & (aux == eq_v)
+    np.testing.assert_array_equal(res.mask, want_mask)
+    want_top = sorted(vals[want_mask].tolist(), reverse=True)[:3]
+    assert vals[res.row_ids].tolist() == want_top
+    # projected ciphertexts decrypt to the selected rows
+    got = np.asarray(E.decrypt(ks, res.columns["v"]))
+    assert got.tolist() == want_top
+
+
+def test_order_by_and_limit():
+    ks = _ks()
+    vals = np.asarray([40, 10, 99, 3, 77, 23, 55], np.int64)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(4))
+    q = db.Query(where=db.Range("v", _enc(ks, 5, 0), _enc(ks, 90, 1)),
+                 order_by=db.OrderBy("v", descending=True),
+                 limit=db.Limit(3))
+    res = db.execute(ks, t, q)
+    want = sorted(vals[(vals >= 5) & (vals <= 90)].tolist(), reverse=True)[:3]
+    assert vals[res.row_ids].tolist() == want
+
+
+# ---------------------------------------------------------------------------
+# sorted index
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DATASETS)
+def test_indexed_equals_linear_range_query(name):
+    ks = _ks()
+    vals = _dataset_rows(name, 80)
+    t = db.Table.from_arrays(ks, name, {"v": vals}, jax.random.PRNGKey(5))
+    idx = db.SortedIndex.build(ks, t, "v")
+    np.testing.assert_array_equal(vals[idx.perm], np.sort(vals))
+    rng = np.random.default_rng(6)
+    for i in range(3):
+        lo, hi = np.sort(rng.choice(vals, 2, replace=False))
+        q = db.Range("v", _enc(ks, lo, 10 + i), _enc(ks, hi, 20 + i))
+        lin = db.execute(ks, t, q)
+        ind = db.execute(ks, t, q, indexes={"v": idx})
+        np.testing.assert_array_equal(lin.mask, ind.mask)
+        np.testing.assert_array_equal(
+            ind.mask, (vals >= lo) & (vals <= hi))
+        assert ind.stats.eval_calls == 0          # no linear scan at all
+        assert ind.stats.index_compares <= 2 * (int(np.ceil(
+            np.log2(len(vals)))) + 1)
+
+
+def test_index_point_lookup_duplicates():
+    ks = _ks()
+    vals = np.asarray([7, 3, 7, 1, 9, 7, 3, 2, 8], np.int64)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(7))
+    idx = db.SortedIndex.build(ks, t, "v")
+    rows = idx.point_lookup(ks, _enc(ks, 7, 0))
+    assert sorted(rows.tolist()) == [0, 2, 5]
+    assert idx.point_lookup(ks, _enc(ks, 4, 1)).size == 0
+
+
+# ---------------------------------------------------------------------------
+# batched multi-query serving
+# ---------------------------------------------------------------------------
+
+def test_query_server_fuses_batch_into_one_eval():
+    ks = _ks()
+    rng = np.random.default_rng(8)
+    vals = rng.integers(0, 200, 70)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(8))
+    server = db.QueryServer(ks, t, batch=4)
+    truth = {}
+    for i in range(4):
+        lo, hi = sorted(rng.integers(0, 200, 2).tolist())
+        qid = server.submit(db.Range("v", _enc(ks, lo, 100 + i),
+                                     _enc(ks, hi, 200 + i)))
+        truth[qid] = (vals >= lo) & (vals <= hi)
+    results = server.run()
+    assert len(server.batch_log) == 1
+    # 4 queries, 8 atoms — ONE fused Eval for the whole batch
+    assert server.batch_log[0].eval_calls == 1
+    for qid, want in truth.items():
+        np.testing.assert_array_equal(results[qid].mask, want)
+
+
+def test_query_server_indexed_lanes():
+    ks = _ks()
+    rng = np.random.default_rng(9)
+    vals = rng.integers(0, 200, 64)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(9))
+    idx = db.SortedIndex.build(ks, t, "v")
+    server = db.QueryServer(ks, t, indexes={"v": idx}, batch=3)
+    truth = {}
+    for i in range(3):
+        lo, hi = sorted(rng.integers(0, 200, 2).tolist())
+        qid = server.submit(db.Range("v", _enc(ks, lo, 300 + i),
+                                     _enc(ks, hi, 400 + i)))
+        truth[qid] = (vals >= lo) & (vals <= hi)
+    results = server.run()
+    assert server.batch_log[0].eval_calls == 0     # all lanes via the index
+    assert server.batch_log[0].index_compares > 0
+    for qid, want in truth.items():
+        np.testing.assert_array_equal(results[qid].mask, want)
+
+
+def test_query_server_mixed_columns_and_topk():
+    ks = _ks()
+    rng = np.random.default_rng(10)
+    vals = rng.integers(0, 200, 40)
+    score = rng.integers(0, 200, 40)
+    t = db.Table.from_arrays(ks, "t", {"v": vals, "s": score},
+                             jax.random.PRNGKey(10))
+    idx = db.SortedIndex.build(ks, t, "v")
+    server = db.QueryServer(ks, t, indexes={"v": idx}, batch=2)
+    q1 = db.Query(where=db.And(db.Range("v", _enc(ks, 30, 0), _enc(ks, 170, 1)),
+                               db.Range("s", _enc(ks, 0, 2), _enc(ks, 120, 3))),
+                  top_k=db.TopK("s", 4))
+    q2 = db.Query(where=db.Eq("v", _enc(ks, int(vals[5]), 4)))
+    id1, id2 = server.submit(q1), server.submit(q2)
+    results = server.run()
+    m1 = (vals >= 30) & (vals <= 170) & (score <= 120)
+    np.testing.assert_array_equal(results[id1].mask, m1)
+    want_top = sorted(score[m1].tolist(), reverse=True)[:4]
+    assert score[results[id1].row_ids].tolist() == want_top
+    np.testing.assert_array_equal(results[id2].mask, vals == vals[5])
