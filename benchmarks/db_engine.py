@@ -14,6 +14,11 @@ Demonstrates the database-perspective payoff on the paper's hg38 dataset
                       QueryServer batch (single fused Eval)
   * e2e             — And(Range, Eq) + TopK matches the plaintext answer
                       exactly on all three paper datasets (full rows)
+  * ckks float pass — the same engine over a CKKS float column (bitcoin
+                      volumes on a 0.25 grid): indexed vs linear range
+                      query, ε-band Eq lookups, And(Range, Eq) + TopK
+                      vs the plaintext reference — BENCH json tracks the
+                      float path next to the integer one
 
 Default profile is test-bfv in paper mode with the Thm 4.1 zero-weight
 CEK precondition (exact compares, ~6x faster than gadget mode — the op
@@ -179,12 +184,116 @@ def run(profile: str = "test-bfv", mode: str = "paper",
              f"exact={exact}")
 
 
+GRID = 0.25       # float lattice step (>> test-ckks tolerance ~0.016)
+
+
+def _float_dataset(rows: int) -> np.ndarray:
+    """Bitcoin trade volumes as CKKS floats, normalized onto the GRID
+    lattice (so the plaintext reference stays exact) and into the small
+    profile's compare headroom."""
+    raw = load_dataset("bitcoin", scheme="ckks")
+    if rows:
+        raw = raw[:rows]
+    return np.round(raw / raw.max() * 4000.0) * GRID        # [0, 1000]
+
+
+def run_ckks(profile: str = "test-ckks", mode: str = "gadget",
+             rows: int = 1024, queries: int = 4,
+             tag: str = "db.ckks") -> None:
+    """Float-column pass: the engine's ckks path, indexed vs linear."""
+    ks = _keys(profile, mode)
+    vals = _float_dataset(rows)
+    n = len(vals)
+    rng = np.random.default_rng(0)
+
+    def fenc(v, seed):
+        return E.encrypt(ks, jnp.asarray(float(v)), jax.random.PRNGKey(seed))
+
+    t0 = time.perf_counter()
+    table = db.Table.from_arrays(ks, "bitcoin_f", {"v": vals},
+                                 jax.random.PRNGKey(2))
+    emit(f"{tag}.encrypt_table", (time.perf_counter() - t0) * 1e6,
+         f"rows={n};padded={table.n_padded};mode={mode}")
+
+    t0 = time.perf_counter()
+    idx = db.SortedIndex.build(ks, table, "v")
+    build_s = time.perf_counter() - t0
+    ok = bool(np.array_equal(vals[idx.perm], np.sort(vals)))
+    emit(f"{tag}.index_build", build_s * 1e6,
+         f"compares={idx.build_compares};sorted_ok={ok}")
+
+    # ε-band point lookup: |v - target| <= ε, linear vs indexed
+    target, eps = float(vals[n // 3]), 2 * GRID + GRID / 2   # off-lattice ε
+    q_eq = db.Eq("v", fenc(target, 3), eps=eps)
+    db.execute(ks, table, q_eq)                              # warm
+    lin_s, lin_res = _timed(lambda: db.execute(ks, table, q_eq), reps=2)
+    db.execute(ks, table, q_eq, indexes={"v": idx})          # warm
+    ind_s, ind_res = _timed(
+        lambda: db.execute(ks, table, q_eq, indexes={"v": idx}), reps=2)
+    want = np.abs(vals - target) <= eps
+    exact = (np.array_equal(lin_res.mask, want)
+             and np.array_equal(ind_res.mask, want))
+    emit(f"{tag}.eps_eq.linear", lin_s * 1e6,
+         f"compares={lin_res.stats.filter_compares};matched={int(want.sum())}")
+    emit(f"{tag}.eps_eq.indexed", ind_s * 1e6,
+         f"compares={ind_res.stats.filter_compares};"
+         f"speedup={lin_s / ind_s:.1f}x;exact={exact}")
+
+    # repeated float range queries, off-lattice bounds: linear vs indexed
+    bounds = []
+    for i in range(queries):
+        a, b = np.sort(rng.choice(vals, 2, replace=False))
+        bounds.append((float(a) - GRID / 2, float(b) + GRID / 2))
+    cts = [(lo, hi, fenc(lo, 100 + i), fenc(hi, 200 + i))
+           for i, (lo, hi) in enumerate(bounds)]
+
+    def run_ranges(indexes):
+        return [db.execute(ks, table, db.Range("v", c_lo, c_hi),
+                           indexes=indexes).mask
+                for _, _, c_lo, c_hi in cts]
+
+    run_ranges(None), run_ranges({"v": idx})                 # warm both
+    lin_total, lin_masks = _timed(lambda: run_ranges(None))
+    ind_total, ind_masks = _timed(lambda: run_ranges({"v": idx}))
+    exact = all(
+        np.array_equal(m, (vals >= lo) & (vals <= hi)) and np.array_equal(m, mi)
+        for (lo, hi, _, _), m, mi in zip(cts, lin_masks, ind_masks))
+    per_lin, per_ind = lin_total / queries, ind_total / queries
+    emit(f"{tag}.range.linear", per_lin * 1e6, f"queries={queries}")
+    emit(f"{tag}.range.indexed", per_ind * 1e6,
+         f"speedup={per_lin / per_ind:.1f}x;exact={exact}")
+
+    # e2e: And(Range, Eq-band) + TopK vs the plaintext reference
+    aux = np.round(rng.uniform(0, 50, n) / GRID) * GRID
+    dt = db.Table.from_arrays(ks, "bitcoin_f2", {"v": vals, "aux": aux},
+                              jax.random.PRNGKey(4))
+    lo = float(np.percentile(vals, 30)) - GRID / 2
+    hi = float(np.percentile(vals, 70)) + GRID / 2
+    eq_v, band = float(aux[n // 2]), GRID + GRID / 2
+    query = db.Query(
+        where=db.And(db.Range("v", fenc(lo, 5), fenc(hi, 6)),
+                     db.Eq("aux", fenc(eq_v, 7), eps=band)),
+        top_k=db.TopK("v", 5))
+    e2e_s, res = _timed(lambda: db.execute(ks, dt, query))
+    want_mask = ((vals >= lo) & (vals <= hi)
+                 & (np.abs(aux - eq_v) <= band))
+    want_top = sorted(vals[want_mask].tolist(), reverse=True)[:5]
+    exact = (np.array_equal(res.mask, want_mask)
+             and vals[res.row_ids].tolist() == want_top)
+    emit(f"{tag}.e2e.float_topk", e2e_s * 1e6,
+         f"rows={n};matched={int(want_mask.sum())};exact={exact}")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="test-bfv")
     ap.add_argument("--mode", default="paper", choices=["paper", "gadget"])
     ap.add_argument("--rows", type=int, default=0, help="0 = full hg38")
     ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--ckks-rows", type=int, default=1024,
+                    help="rows for the float-column pass (0 = skip)")
     args = ap.parse_args()
     run(profile=args.profile, mode=args.mode, rows=args.rows,
         queries=args.queries)
+    if args.ckks_rows:
+        run_ckks(rows=args.ckks_rows, queries=max(2, args.queries // 2))

@@ -13,6 +13,11 @@ slice (unchanged seed demo).  Part 2 builds a `repro.db.Table` over hg38,
 runs a fused And(Range, Eq) + TopK plan — every filter comparison in ONE
 batched Eval — and contrasts a linear-scan range query with the same
 query through a HADES sorted index (O(log n) encrypted binary search).
+Part 3 switches to a CKKS profile and runs the same engine over FLOAT
+columns: ε-band equality (`Eq(col, v, eps)` selects |col - v| <= ε), an
+ε-aware indexed lookup, and a float top-k — the paper's "supports both
+integer and floating-point operations" claim, end to end.  Skip it with
+--no-ckks (the ckks keygen is the slow part).
 """
 import argparse
 import time
@@ -123,18 +128,74 @@ def part2_db_engine(ks, params, rows: int, index_rows: int):
           f"speedup {t_lin / t_ind:.1f}x, match={match}")
 
 
+def part3_ckks_floats(rows: int):
+    """Float columns through the ckks profile: ε-band Eq + float top-k."""
+    from repro.core.ckks import equality_tolerance
+
+    params = make_params("test-ckks", mode="gadget")
+    print(f"\n--- ckks float columns ({rows} rows, native tolerance "
+          f"{equality_tolerance(params):.4f}) ---")
+    t0 = time.time()
+    ks = keygen(params, jax.random.PRNGKey(3))
+    print(f"ckks keygen: {time.time()-t0:.1f}s")
+
+    raw = load_dataset("bitcoin", scheme="ckks")[:rows]
+    vals = np.round(raw / raw.max() * 400) * 0.25       # [0, 100] grid floats
+    rng = np.random.default_rng(1)
+    score = np.round(rng.uniform(0, 10, rows) * 4) * 0.25
+    table = db.Table.from_arrays(ks, "btc_float",
+                                 {"vol": vals, "score": score},
+                                 jax.random.PRNGKey(4))
+
+    def enc(v, s):
+        return E.encrypt(ks, jnp.asarray(float(v)), jax.random.PRNGKey(s))
+
+    # ε-band equality: every day whose score is within 0.3 of today's
+    target, eps = float(score[-1]), 0.3
+    res = db.execute(ks, table, db.Eq("score", enc(target, 5), eps=eps))
+    want = np.abs(score - target) <= eps
+    print(f"Eq(score, {target}, eps={eps}): {len(res)} rows "
+          f"(plaintext: {int(want.sum())}, "
+          f"exact={bool(np.array_equal(res.mask, want))})")
+
+    # float range + top-k, linear vs ε-aware indexed binary search
+    lo, hi = (float(np.percentile(vals, 40)) - 0.125,
+              float(np.percentile(vals, 60)) + 0.125)
+    q = db.Query(where=db.Range("vol", enc(lo, 6), enc(hi, 7)),
+                 top_k=db.TopK("vol", 5), select=("vol",))
+    idx = db.SortedIndex.build(ks, table, "vol")
+    lin = db.execute(ks, table, q)
+    ind = db.execute(ks, table, q, indexes={"vol": idx})
+    wmask = (vals >= lo) & (vals <= hi)
+    wtop = sorted(vals[wmask].tolist(), reverse=True)[:5]
+    print(f"Range[{lo:.2f}, {hi:.2f}] + TopK(5): "
+          f"linear==indexed=={bool(np.array_equal(lin.mask, ind.mask))}, "
+          f"top-5 exact={vals[ind.row_ids].tolist() == wtop} "
+          f"({ind.stats.index_compares} probe compares vs "
+          f"{lin.stats.scan_compares} scan)")
+    dec = np.asarray(E.decrypt(ks, ind.columns["vol"]))
+    print(f"projected ciphertexts decrypt within "
+          f"{np.abs(dec - np.asarray(wtop)).max():.2e} of plaintext")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--rows", type=int, default=0,
                     help="hg38 rows for the db demo (0 = all 34,423)")
     ap.add_argument("--index-rows", type=int, default=4096,
                     help="rows to index (0 = all; build is O(n log^2 n))")
+    ap.add_argument("--no-ckks", action="store_true",
+                    help="skip the float-column (ckks) part")
+    ap.add_argument("--ckks-rows", type=int, default=256,
+                    help="rows for the float-column part")
     args = ap.parse_args(argv)
 
     params = make_params("test-bfv", mode="gadget")
     ks = keygen(params, jax.random.PRNGKey(0))
     part1_primitives(ks, params)
     part2_db_engine(ks, params, args.rows, args.index_rows)
+    if not args.no_ckks:
+        part3_ckks_floats(args.ckks_rows)
 
 
 if __name__ == "__main__":

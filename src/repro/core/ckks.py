@@ -26,3 +26,19 @@ def equality_tolerance(params: HadesParams) -> float:
     """Smallest |x0 - x1| the CKKS profile can distinguish from equality:
     below this, Alg. 2 returns 0 (approximate equality) by design."""
     return params.tau / (params.scale * params.delta_enc)
+
+
+def eps_to_tau(params: HadesParams, eps: float) -> int:
+    """Plaintext-units tolerance ε -> integer eval-domain threshold.
+
+    The eval value of a comparison is ≈ scale·Δ_enc·(m0-m1) + noise, so a
+    caller-chosen ε-band |m0-m1| <= ε becomes the decode threshold
+    τ_ε = ε·scale·Δ_enc.  The result is clamped from below to the
+    profile's own τ: an ε under `equality_tolerance(params)` would sit
+    inside the noise floor and cannot be resolved — it silently degrades
+    to the profile's native equality semantics (documented contract,
+    checked by tests).
+    """
+    if eps < 0:
+        raise ValueError(f"epsilon must be non-negative, got {eps}")
+    return max(int(round(eps * params.scale * params.delta_enc)), params.tau)

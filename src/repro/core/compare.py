@@ -25,6 +25,7 @@ from typing import Callable, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import ckks as _CK
 from repro.core import encrypt as _E
 from repro.core import gadget
 from repro.core import ring as R
@@ -60,15 +61,36 @@ def eval_value(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
     return R.crt_centered(params, coeff0)
 
 
-def three_way(ks: KeySet, v: jax.Array) -> jax.Array:
-    """Alg. 2 line 5: eval value -> -1/0/+1 (τ-thresholded)."""
-    tau = ks.params.tau
+def resolve_tau(ks: KeySet, eps: Optional[float]) -> int:
+    """The decode threshold an ε-tolerance request resolves to.
+
+    eps=None keeps the profile's native τ (BFV: integer tie semantics;
+    CKKS: `ckks.equality_tolerance` precision semantics).  An explicit ε
+    (plaintext units) widens the equality band: values within ε compare
+    as 0.  ε below the noise floor clamps up to the native τ.
+    """
+    if eps is None:
+        return ks.params.tau
+    return _CK.eps_to_tau(ks.params, eps)
+
+
+def three_way(ks: KeySet, v: jax.Array, *,
+              eps: Optional[float] = None) -> jax.Array:
+    """Alg. 2 line 5: eval value -> -1/0/+1 (τ-thresholded).
+
+    `eps` widens the equality band to |m0-m1| <= ε (plaintext units) —
+    the ε-tolerant semantics CKKS float columns need (the static τ_ε is
+    closed over by jit, so per-ε compiled compares cache like the
+    default)."""
+    tau = resolve_tau(ks, eps)
     return jnp.where(jnp.abs(v) < tau, 0, jnp.sign(v)).astype(jnp.int32)
 
 
-def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
-    """Algorithm 2: three-way comparison -1/0/+1 (τ-thresholded)."""
-    return three_way(ks, eval_value(ks, ct0, ct1))
+def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
+            eps: Optional[float] = None) -> jax.Array:
+    """Algorithm 2: three-way comparison -1/0/+1 (τ-thresholded; `eps`
+    optionally widens the equality band, see `three_way`)."""
+    return three_way(ks, eval_value(ks, ct0, ct1), eps=eps)
 
 
 def compare_fae(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
@@ -79,10 +101,10 @@ def compare_fae(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext) -> jax.Array:
     return eval_value(ks, ct0, ct1) > 0
 
 
-def compare_many(ks: KeySet, cts_a: Ciphertext,
-                 cts_b: Ciphertext) -> jax.Array:
+def compare_many(ks: KeySet, cts_a: Ciphertext, cts_b: Ciphertext, *,
+                 eps: Optional[float] = None) -> jax.Array:
     """Vectorized Alg. 2 over matching batch shapes."""
-    return compare(ks, cts_a, cts_b)
+    return compare(ks, cts_a, cts_b, eps=eps)
 
 
 # ---------------------------------------------------------------------------
@@ -94,18 +116,22 @@ def _gather_ct(ct: Ciphertext, idx: jax.Array) -> Ciphertext:
 
 
 def range_query(ks: KeySet, column: Ciphertext, ct_lo: Ciphertext,
-                ct_hi: Ciphertext) -> jax.Array:
+                ct_hi: Ciphertext, *,
+                eps: Optional[float] = None) -> jax.Array:
     """Mask of rows with lo <= m <= hi.  column: batched ct over N rows.
 
     Both bound comparisons run in ONE batched `eval_value` call: the bounds
     are stacked into a [2, 1] batch that broadcasts against the column's
     [N] rows, halving kernel launches on the hot path versus the naive
     compare-vs-lo + compare-vs-hi pipeline.
+
+    `eps` widens the boundary tolerance on float (CKKS) columns: rows
+    within ε of a bound count as inside (ε-inclusive bounds).
     """
     bounds = Ciphertext(
         jnp.stack([ct_lo.c0, ct_hi.c0])[:, None],    # [2, 1, K, n]
         jnp.stack([ct_lo.c1, ct_hi.c1])[:, None])
-    cmp = three_way(ks, eval_value(ks, column, bounds))   # [2, N]
+    cmp = three_way(ks, eval_value(ks, column, bounds), eps=eps)   # [2, N]
     return (cmp[0] >= 0) & (cmp[1] <= 0)
 
 

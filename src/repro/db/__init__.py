@@ -15,6 +15,10 @@ The comparison primitives themselves (range_query, encrypted_sort,
 encrypted_topk) live in core/compare.py and are re-exported here — the
 engine is a consumer of those ops, existing callers keep working.
 """
+from repro.core.ckks import (  # noqa: F401
+    eps_to_tau,
+    equality_tolerance,
+)
 from repro.core.compare import (  # noqa: F401
     encrypted_sort,
     encrypted_topk,
@@ -25,6 +29,7 @@ from repro.db.executor import (  # noqa: F401
     QueryResult,
     execute,
     fused_compare,
+    fused_eval,
 )
 from repro.db.index import SortedIndex  # noqa: F401
 from repro.db.plan import (  # noqa: F401

@@ -6,9 +6,12 @@ Execution model (one XLA program per stage):
      2 (Range) comparison atoms.  ALL atoms across the whole predicate
      tree are stacked into a single [A, N] batched `eval_value` call —
      a 5-leaf plan over 34k rows is still ONE fused Eval (the same fused
-     kernel path `kernels/cmp_eval.py` lowers on TPU).  Leaves whose
-     column has a `SortedIndex` skip the scan entirely and resolve with
-     O(log n) binary-search compares.
+     kernel path `kernels/cmp_eval.py` lowers on TPU).  The launch
+     returns RAW eval values; each atom's decode threshold (the profile
+     τ, or the predicate's ε-tolerance via `ckks.eps_to_tau`) is applied
+     host-side, so mixed-ε plans share one launch and one jit cache
+     entry.  Leaves whose column has a `SortedIndex` skip the scan
+     entirely and resolve with O(log n) binary-search compares.
   2. COMBINE.  Atom outcomes -> leaf masks -> boolean tree (host-side
      numpy; the comparison outcomes are exactly what the HADES trapdoor
      reveals to the server).
@@ -31,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compare as C
+from repro.core.ckks import eps_to_tau
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
 from repro.db import plan as P
@@ -88,9 +92,18 @@ def _jitted(ks: KeySet, name: str, fn):
     return cache[name]
 
 
-def jitted_compare(ks: KeySet):
-    """Jitted 3-way Alg. 2 compare closed over the keyset."""
-    return _jitted(ks, "cmp3", lambda a, b: C.compare(ks, a, b))
+def jitted_eval(ks: KeySet):
+    """Jitted raw eval values (no threshold) closed over the keyset —
+    the fused scan and the index search both decode from this, applying
+    their own per-atom / per-lane τ on the host."""
+    return _jitted(ks, "eval", lambda a, b: C.eval_value(ks, a, b))
+
+
+def atom_tau(ks: KeySet, atom: P.Atom) -> int:
+    """The decode threshold atom resolves to (profile τ or ε-derived)."""
+    if atom.eps is None:
+        return ks.params.tau
+    return eps_to_tau(ks.params, atom.eps)
 
 
 def jitted_comparator(ks: KeySet):
@@ -99,9 +112,14 @@ def jitted_comparator(ks: KeySet):
     return lambda _ks, a, b: fae(a, b)
 
 
-def fused_compare(ks: KeySet, table: Table, atoms: List[P.Atom], *,
-                  engine: str = "jnp") -> np.ndarray:
-    """Three-way outcomes for all atoms in ONE batched Eval: [A, N]."""
+def fused_eval(ks: KeySet, table: Table, atoms: List[P.Atom], *,
+               engine: str = "jnp") -> np.ndarray:
+    """RAW eval values for all atoms in ONE batched Eval: [A, N] int64.
+
+    Thresholds are deliberately NOT applied here: each atom decodes its
+    own τ (profile default or ε-derived) host-side in `scan_leaf_mask`,
+    so a plan mixing exact and ε-band predicates still runs one launch.
+    """
     col = Ciphertext(
         jnp.stack([table.columns[a.column].c0 for a in atoms]),
         jnp.stack([table.columns[a.column].c1 for a in atoms]))
@@ -116,28 +134,49 @@ def fused_compare(ks: KeySet, table: Table, atoms: List[P.Atom], *,
         b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
         b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
         bflat = Ciphertext(b0.reshape(flat.c0.shape), b1.reshape(flat.c1.shape))
-        out = KO.compare(ks, flat, bflat)
+        out = KO.eval_values(ks, flat, bflat)
         return np.asarray(out).reshape(A, N)
-    return np.asarray(jitted_compare(ks)(col, bounds))
+    return np.asarray(jitted_eval(ks)(col, bounds))
 
 
-def _atom_mask(op: str, cmp3: np.ndarray) -> np.ndarray:
+def fused_compare(ks: KeySet, table: Table, atoms: List[P.Atom], *,
+                  engine: str = "jnp") -> np.ndarray:
+    """Three-way outcomes (profile τ) for all atoms in ONE batched Eval.
+
+    Compatibility wrapper over `fused_eval` for callers that want the
+    -1/0/+1 view; the executor itself consumes the raw values.
+    """
+    v = fused_eval(ks, table, atoms, engine=engine)
+    tau = ks.params.tau
+    return np.where(np.abs(v) < tau, 0, np.sign(v)).astype(np.int32)
+
+
+def _atom_mask(op: str, vals: np.ndarray, tau: int) -> np.ndarray:
+    """Raw eval row -> bool mask under this atom's decode threshold.
+
+    vals ≈ scale·Δ_enc·(column - value) + noise, so with the three-way
+    decode c = (0 if |vals| < τ else sign):  >= is c >= 0, <= is c <= 0,
+    == is c == 0 — written directly on the raw values.
+    """
     if op == ">=":
-        return cmp3 >= 0
+        return vals > -tau
     if op == "<=":
-        return cmp3 <= 0
+        return vals < tau
     if op == "==":
-        return cmp3 == 0
+        return np.abs(vals) < tau
     raise ValueError(f"unknown atom op {op!r}")
 
 
-def scan_leaf_mask(atoms: List[P.Atom], cmp3: np.ndarray, start: int,
-                   count: int) -> np.ndarray:
-    """AND the fused-scan outcomes of one leaf's atoms into its row mask
-    (single implementation for executor and QueryServer)."""
-    m = _atom_mask(atoms[start].op, cmp3[start])
+def scan_leaf_mask(ks: KeySet, atoms: List[P.Atom], vals: np.ndarray,
+                   start: int, count: int) -> np.ndarray:
+    """AND the fused-scan raw eval values of one leaf's atoms into its
+    row mask, each atom under its own τ (single implementation for
+    executor and QueryServer)."""
+    a = atoms[start]
+    m = _atom_mask(a.op, vals[start], atom_tau(ks, a))
     for j in range(1, count):
-        m = m & _atom_mask(atoms[start + j].op, cmp3[start + j])
+        a = atoms[start + j]
+        m = m & _atom_mask(a.op, vals[start + j], atom_tau(ks, a))
     return m
 
 
@@ -181,9 +220,10 @@ def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
         if idx is not None:
             before = idx.search_compares
             if isinstance(leaf, P.Range):
-                leaf_masks[i] = idx.mask_range(ks, leaf.lo, leaf.hi, N)
+                leaf_masks[i] = idx.mask_range(ks, leaf.lo, leaf.hi, N,
+                                               eps=leaf.eps)
             else:
-                leaf_masks[i] = idx.mask_eq(ks, leaf.value, N)
+                leaf_masks[i] = idx.mask_eq(ks, leaf.value, N, eps=leaf.eps)
             stats.index_compares += idx.search_compares - before
             stats.indexed_leaves += 1
         else:
@@ -192,11 +232,11 @@ def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
             scan_atoms.extend(atoms)
             stats.scan_leaves += 1
     if scan_atoms:
-        cmp3 = fused_compare(ks, table, scan_atoms, engine=engine)
+        vals = fused_eval(ks, table, scan_atoms, engine=engine)
         stats.eval_calls += 1
         stats.scan_compares += len(scan_atoms) * N
         for leaf_i, start, count in scan_slices:
-            leaf_masks[leaf_i] = scan_leaf_mask(scan_atoms, cmp3,
+            leaf_masks[leaf_i] = scan_leaf_mask(ks, scan_atoms, vals,
                                                 start, count)
     return leaf_masks  # type: ignore[return-value]
 

@@ -12,6 +12,15 @@ lanes and resolves them together — every binary-search step is ONE
 batched Eval over B probes (a range query is 2 lanes; the multi-query
 server stacks 2K lanes for K clients).  The per-step compare is jitted
 once per lane count, so repeated queries pay only dispatch.
+
+Float (CKKS) columns: every lane can carry its own decode threshold
+(`taus`) — the probe Eval returns raw values and the ε-aware three-way
+decode happens host-side, so an ε-band Eq and an exact Range ride the
+same batched probe launch.  An ε-band point lookup resolves the
+boundaries of [v-ε, v+ε] directly: lower lane "first row with
+col > v - ε", upper lane "first row with col > v + ε", both expressed
+through the widened τ_ε on the SAME trapdoor ciphertext — the client
+sends one encrypted v, never ε-shifted plaintexts.
 """
 from __future__ import annotations
 
@@ -22,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compare as C
+from repro.core.ckks import eps_to_tau
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
 from repro.db.table import Table, rows_to_mask
@@ -44,7 +54,7 @@ class SortedIndex:
         self.build_compares = build_compares
         self.search_compares = 0               # cumulative probe count
         self.last_probe_counts = np.zeros(0, np.int64)  # per-lane, last call
-        self._cmp: Optional[Callable] = None   # jitted Alg. 2, lazy
+        self._cmp: Optional[Callable] = None   # jitted raw probe Eval, lazy
 
     # -- construction ------------------------------------------------------
 
@@ -64,25 +74,40 @@ class SortedIndex:
 
     # -- search ------------------------------------------------------------
 
-    def _cmp3(self, ks: KeySet) -> Callable:
-        """Jitted 3-way compare (jit itself specializes per lane shape)."""
+    def _eval(self, ks: KeySet) -> Callable:
+        """Jitted raw probe Eval (jit specializes per lane shape).  The
+        three-way decode happens host-side so each lane applies its own
+        τ (profile default or ε-derived)."""
         if self._cmp is None:
-            self._cmp = jax.jit(lambda a, b: C.compare(ks, a, b))
+            self._cmp = jax.jit(lambda a, b: C.eval_value(ks, a, b))
         return self._cmp
 
-    def search(self, ks: KeySet, values: Ciphertext,
-               strict: np.ndarray) -> np.ndarray:
+    def _lane_taus(self, ks: KeySet, n_lanes: int,
+                   taus: Optional[np.ndarray]) -> np.ndarray:
+        if taus is None:
+            return np.full(n_lanes, ks.params.tau, dtype=np.int64)
+        taus = np.asarray(taus, dtype=np.int64)
+        assert taus.shape == (n_lanes,)
+        return taus
+
+    def search(self, ks: KeySet, values: Ciphertext, strict: np.ndarray,
+               taus: Optional[np.ndarray] = None) -> np.ndarray:
         """Batched boundary search over B lanes.
 
         values: ciphertexts with leading batch dim B (EncBasic trapdoors).
         strict[i] False -> lower bound: first sorted pos with col >= v_i;
         strict[i] True  -> upper bound: first sorted pos with col >  v_i.
-        Every iteration is ONE batched Eval over the B probe lanes.
+        taus[i] (optional) is lane i's decode threshold: with a widened
+        τ_ε, "col >= v" means "col > v - ε" and "col > v" means
+        "col > v + ε" — the ε-aware boundary semantics the ε-band
+        predicates lower to.  Every iteration is ONE batched Eval over
+        the B probe lanes.
         """
         strict = np.asarray(strict, bool)
         B = values.c0.shape[0]
         assert strict.shape == (B,)
-        cmp3 = self._cmp3(ks)
+        taus = self._lane_taus(ks, B, taus)
+        ev = self._eval(ks)
         lo = np.zeros(B, np.int64)
         hi = np.full(B, self.n_rows, np.int64)
         probes = np.zeros(B, np.int64)
@@ -92,7 +117,8 @@ class SortedIndex:
             probe = np.where(active, mid, 0)       # fixed shape; dead lanes
             rows = Ciphertext(self.sorted_ct.c0[probe],
                               self.sorted_ct.c1[probe])
-            c = np.asarray(cmp3(rows, values))     # [B] in {-1, 0, +1}
+            v = np.asarray(ev(rows, values))                  # [B] raw
+            c = np.where(np.abs(v) < taus, 0, np.sign(v))     # per-lane τ
             probes += active
             go_left = np.where(strict, c > 0, c >= 0)
             hi = np.where(active & go_left, mid, hi)
@@ -101,27 +127,40 @@ class SortedIndex:
         self.last_probe_counts = probes            # per-lane attribution
         return lo
 
-    def search_range(self, ks: KeySet, ct_lo: Ciphertext,
-                     ct_hi: Ciphertext) -> np.ndarray:
-        """Row ids with lo <= value <= hi — 2 lanes, ~2 log2 n compares."""
+    def _eps_taus(self, ks: KeySet, eps: Optional[float]) -> Optional[np.ndarray]:
+        if eps is None:
+            return None
+        tau = eps_to_tau(ks.params, eps)
+        return np.asarray([tau, tau], dtype=np.int64)
+
+    def search_range(self, ks: KeySet, ct_lo: Ciphertext, ct_hi: Ciphertext,
+                     *, eps: Optional[float] = None) -> np.ndarray:
+        """Row ids with lo <= value <= hi — 2 lanes, ~2 log2 n compares.
+        `eps` makes the bounds ε-inclusive (float columns)."""
         bounds = _stack_cts([ct_lo, ct_hi])
-        l, r = self.search(ks, bounds, np.array([False, True]))
+        l, r = self.search(ks, bounds, np.array([False, True]),
+                           self._eps_taus(ks, eps))
         return self.perm[l:r]
 
-    def point_lookup(self, ks: KeySet, ct_value: Ciphertext) -> np.ndarray:
-        """Row ids with value == v (duplicates included) — 2 lanes."""
+    def point_lookup(self, ks: KeySet, ct_value: Ciphertext, *,
+                     eps: Optional[float] = None) -> np.ndarray:
+        """Row ids with value == v (duplicates included) — 2 lanes.
+        `eps` widens to the band |value - v| <= ε (float columns)."""
         bounds = _stack_cts([ct_value, ct_value])
-        l, r = self.search(ks, bounds, np.array([False, True]))
+        l, r = self.search(ks, bounds, np.array([False, True]),
+                           self._eps_taus(ks, eps))
         return self.perm[l:r]
 
     def mask_range(self, ks: KeySet, ct_lo: Ciphertext, ct_hi: Ciphertext,
-                   n_padded: int) -> np.ndarray:
+                   n_padded: int, *, eps: Optional[float] = None) -> np.ndarray:
         """search_range as a [n_padded] bool row mask (executor plumbing)."""
-        return rows_to_mask(self.search_range(ks, ct_lo, ct_hi), n_padded)
+        return rows_to_mask(self.search_range(ks, ct_lo, ct_hi, eps=eps),
+                            n_padded)
 
-    def mask_eq(self, ks: KeySet, ct_value: Ciphertext,
-                n_padded: int) -> np.ndarray:
-        return rows_to_mask(self.point_lookup(ks, ct_value), n_padded)
+    def mask_eq(self, ks: KeySet, ct_value: Ciphertext, n_padded: int, *,
+                eps: Optional[float] = None) -> np.ndarray:
+        return rows_to_mask(self.point_lookup(ks, ct_value, eps=eps),
+                            n_padded)
 
     def __repr__(self) -> str:
         return (f"SortedIndex({self.column!r}, rows={self.n_rows}, "

@@ -3,9 +3,18 @@
 A query against an encrypted `Table` is a small tree of predicate nodes
 over named columns plus optional ordering / truncation stages:
 
-    predicates : Range(col, ct_lo, ct_hi) | Eq(col, ct_value)
+    predicates : Range(col, ct_lo, ct_hi[, eps]) | Eq(col, ct_value[, eps])
                  And(...) | Or(...) | Not(p)
     stages     : OrderBy(col, descending) | TopK(col, k) | Limit(count)
+
+Float (CKKS) columns carry an optional per-predicate tolerance `eps`
+(plaintext units): `Eq(col, v, eps)` is the ε-band |col - v| <= ε rather
+than exact match, and `Range` bounds become ε-inclusive.  The ε rides
+the IR down to the executor's fused eval launch, where it resolves to a
+per-atom decode threshold (`ckks.eps_to_tau`) applied host-side on the
+shared raw eval values — so mixed-ε plans still fuse into ONE launch.
+`eps=None` keeps the profile's native semantics (exact on BFV,
+`ckks.equality_tolerance` precision on CKKS).
 
 Predicate *constants* are client-encrypted `Ciphertext` trapdoors — the
 server combines HADES comparison outcomes but never sees a plaintext
@@ -40,18 +49,24 @@ class Predicate:
 
 @dataclasses.dataclass(frozen=True)
 class Range(Predicate):
-    """lo <= column <= hi (both bounds encrypted, inclusive)."""
+    """lo <= column <= hi (both bounds encrypted, inclusive).  `eps`
+    makes the bounds ε-inclusive on float columns (rows within ε of a
+    bound count as inside)."""
     column: str
     lo: Ciphertext
     hi: Ciphertext
+    eps: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
 class Eq(Predicate):
     """column == value (encrypted; requires EncBasic operands — FAE
-    deliberately obfuscates equality, Alg. 3)."""
+    deliberately obfuscates equality, Alg. 3).  `eps` turns exact match
+    into the ε-band |column - value| <= ε (the equality semantics float
+    CKKS columns need; `eps=None` uses the profile's native τ)."""
     column: str
     value: Ciphertext
+    eps: Optional[float] = None
 
 
 class And(Predicate):
@@ -118,10 +133,15 @@ class Query:
 
 @dataclasses.dataclass(frozen=True)
 class Atom:
-    """One scan comparison: satisfied iff compare(column_row, value) op 0."""
+    """One scan comparison: satisfied iff compare(column_row, value) op 0.
+
+    `eps` is the predicate's tolerance (plaintext units) — the executor
+    resolves it to this atom's decode threshold; None = profile default.
+    """
     column: str
     op: str                    # ">=", "<=", "=="
     value: Ciphertext
+    eps: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -143,16 +163,18 @@ class CompiledPlan:
         """The linear-scan comparisons leaf `leaf_idx` lowers to."""
         leaf = self.leaves[leaf_idx]
         if isinstance(leaf, Range):
-            return (Atom(leaf.column, ">=", leaf.lo),
-                    Atom(leaf.column, "<=", leaf.hi))
-        return (Atom(leaf.column, "==", leaf.value),)
+            return (Atom(leaf.column, ">=", leaf.lo, leaf.eps),
+                    Atom(leaf.column, "<=", leaf.hi, leaf.eps))
+        return (Atom(leaf.column, "==", leaf.value, leaf.eps),)
 
 
 def _leaf_key(leaf: Predicate) -> tuple:
-    """Structural identity for dedup: same column + same trapdoor arrays."""
+    """Structural identity for dedup: same column + same trapdoor arrays
+    + same tolerance (different ε = different predicate)."""
     if isinstance(leaf, Range):
-        return ("range", leaf.column, id(leaf.lo.c0), id(leaf.hi.c0))
-    return ("eq", leaf.column, id(leaf.value.c0))
+        return ("range", leaf.column, id(leaf.lo.c0), id(leaf.hi.c0),
+                leaf.eps)
+    return ("eq", leaf.column, id(leaf.value.c0), leaf.eps)
 
 
 def compile_plan(query: Union[Query, Predicate]) -> CompiledPlan:

@@ -9,7 +9,11 @@ against one table in a single vectorized pass —
     filter stage, regardless of how many clients asked);
   * every index-eligible leaf joins ONE lane-batched binary search per
     index (2 lanes per Range/Eq, so K clients cost ~2K·log2 n compares
-    resolved in log2 n batched probe Evals).
+    resolved in log2 n batched probe Evals);
+  * float (CKKS) lanes ride the same launches: each lane carries its
+    predicate's decode threshold (ε-band Eq, ε-inclusive Range bounds),
+    and scan atoms threshold the shared raw-eval launch per atom — a
+    batch mixing exact BFV-style and ε-tolerant predicates still fuses.
 
 Per-query combine / order / limit stages then run on each query's own
 mask (they depend on per-query match sets, so they cannot share a
@@ -30,6 +34,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.ckks import eps_to_tau
 from repro.core.keys import KeySet
 from repro.db import executor as X
 from repro.db import plan as P
@@ -96,6 +101,7 @@ class QueryServer:
         scan_ref: List[Tuple[int, int, int, int]] = []  # (plan#, leaf, start, count)
         lane_cts: Dict[str, list] = {}                   # column -> [ct, ...]
         lane_strict: Dict[str, list] = {}
+        lane_taus: Dict[str, list] = {}                  # per-lane decode τ
         lane_ref: Dict[str, list] = {}                   # -> (plan#, leaf)
         for pi, (_, plan) in enumerate(plans):
             for li, leaf in enumerate(plan.leaves):
@@ -103,9 +109,12 @@ class QueryServer:
                 if idx is not None:
                     lo, hi = ((leaf.lo, leaf.hi) if isinstance(leaf, P.Range)
                               else (leaf.value, leaf.value))
+                    tau = (ks.params.tau if leaf.eps is None
+                           else eps_to_tau(ks.params, leaf.eps))
                     lane_cts.setdefault(leaf.column, []).extend([lo, hi])
                     lane_strict.setdefault(leaf.column, []).extend(
                         [False, True])
+                    lane_taus.setdefault(leaf.column, []).extend([tau, tau])
                     lane_ref.setdefault(leaf.column, []).append((pi, li))
                 else:
                     atoms = plan.scan_atoms(li)
@@ -125,7 +134,8 @@ class QueryServer:
             idx = self.indexes[column]
             before = idx.search_compares
             pos = idx.search(ks, _stack_cts(cts),
-                             np.asarray(lane_strict[column]))
+                             np.asarray(lane_strict[column]),
+                             np.asarray(lane_taus[column], np.int64))
             bstats.index_compares += idx.search_compares - before
             for j, (pi, li) in enumerate(lane_ref[column]):
                 l, r = int(pos[2 * j]), int(pos[2 * j + 1])
@@ -137,11 +147,11 @@ class QueryServer:
 
         # ONE fused Eval for every scan atom of every query in the batch
         if scan_atoms:
-            cmp3 = X.fused_compare(ks, table, scan_atoms, engine=self.engine)
+            vals = X.fused_eval(ks, table, scan_atoms, engine=self.engine)
             bstats.eval_calls += 1
             bstats.scan_compares += len(scan_atoms) * N
             for pi, li, start, count in scan_ref:
-                leaf_masks[pi][li] = X.scan_leaf_mask(scan_atoms, cmp3,
+                leaf_masks[pi][li] = X.scan_leaf_mask(ks, scan_atoms, vals,
                                                       start, count)
                 qstats[pi].scan_leaves += 1
                 qstats[pi].scan_compares += count * N

@@ -59,9 +59,14 @@ class Table:
                     fae: bool = False) -> "Table":
         """Encrypt host arrays into a padded column-store.
 
-        data: {column: [n_rows] int (bfv) or float (ckks)}.  `fae=True`
-        uses perturbation-aware encryption (Alg. 3) — note this trades
-        away exact Eq/point-lookup semantics by design.
+        data: {column: [n_rows] int (bfv) or float (ckks)}.  Under a
+        CKKS profile every column is a float column (fixed-point encoded
+        at Δ_enc; integer input is fine and stays exact within the
+        profile's precision).  Under BFV, float input with fractional
+        values is rejected — it would silently truncate; use a ckks
+        profile for float columns.  `fae=True` uses perturbation-aware
+        encryption (Alg. 3) — note this trades away exact
+        Eq/point-lookup semantics by design.
         """
         lengths = {c: len(v) for c, v in data.items()}
         n_rows = next(iter(lengths.values()))
@@ -73,6 +78,12 @@ class Table:
         columns = {}
         for i, (cname, arr) in enumerate(data.items()):
             arr = np.asarray(arr)
+            if (not is_float and np.issubdtype(arr.dtype, np.floating)
+                    and not np.array_equal(arr, np.trunc(arr))):
+                raise ValueError(
+                    f"column {cname!r}: fractional float values under a "
+                    f"{ks.params.profile.scheme} profile would truncate — "
+                    "use a ckks profile for float columns")
             padded = np.zeros((n_padded,),
                               np.float64 if is_float else np.int64)
             padded[:n_rows] = arr

@@ -58,10 +58,15 @@ def negacyclic_mul(a: jax.Array, b: jax.Array, ring: R.Ring, *,
                              interpret=interpret)[:nb]
 
 
-def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
-            block_b: int = NK.DEFAULT_BLOCK_B,
-            interpret: bool | None = None) -> jax.Array:
-    """Kernel-backed Algorithm 2 (-1/0/+1). Batched over leading dim."""
+def eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
+                block_b: int = NK.DEFAULT_BLOCK_B,
+                interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed centered eval values (Alg. 2 lines 2-4, no threshold).
+
+    Returning the raw value lets callers apply their own decode threshold
+    — the db executor thresholds per-atom (ε-tolerant CKKS equality) on
+    ONE fused launch instead of one launch per distinct ε.
+    """
     interpret = (not _on_tpu()) if interpret is None else interpret
     params, rng = ks.params, ks.ring
     d = ct_sub(rng, ct0, ct1)
@@ -81,5 +86,13 @@ def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
         cek_br = CK.cek_gadget_to_br(ks)
         coeff0 = CK.eval_coeff0_gadget(d0p, dig, cek_br, rng, params.scale,
                                        block_b=block_b, interpret=interpret)
-    v = R.crt_centered(params, coeff0[:b])
-    return jnp.where(jnp.abs(v) < params.tau, 0, jnp.sign(v)).astype(jnp.int32)
+    return R.crt_centered(params, coeff0[:b])
+
+
+def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
+            block_b: int = NK.DEFAULT_BLOCK_B,
+            interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed Algorithm 2 (-1/0/+1). Batched over leading dim."""
+    v = eval_values(ks, ct0, ct1, block_b=block_b, interpret=interpret)
+    return jnp.where(jnp.abs(v) < ks.params.tau,
+                     0, jnp.sign(v)).astype(jnp.int32)
