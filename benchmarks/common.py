@@ -1,8 +1,9 @@
-"""Shared benchmark harness: timing, CSV emission, profile selection."""
+"""Shared benchmark harness: timing, CSV + JSON emission, profiles."""
 from __future__ import annotations
 
+import json
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 import jax
 
@@ -45,3 +46,41 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def header() -> None:
     print("name,us_per_call,derived")
+
+
+def _parse_derived(derived: str) -> Dict[str, object]:
+    """'k=v;k2=v2' -> typed dict (ints/floats/bools where they parse)."""
+    out: Dict[str, object] = {}
+    for part in derived.split(";"):
+        if "=" not in part:
+            continue
+        k, v = part.split("=", 1)
+        for cast in (int, float):
+            try:
+                out[k] = cast(v)
+                break
+            except ValueError:
+                continue
+        else:
+            out[k] = {"True": True, "False": False}.get(v, v)
+    return out
+
+
+def write_json(path: str, *, meta: Dict[str, object] | None = None,
+               extra: Dict[str, object] | None = None) -> dict:
+    """Dump every emitted row (plus free-form `extra` sections) as one
+    machine-readable JSON document — the cross-PR perf trajectory file
+    (BENCH_db.json etc.).  Re-parses each row's derived string into a
+    typed dict so downstream tooling never scrapes the CSV."""
+    doc = {
+        "meta": dict(meta or {}),
+        "passes": [{"name": n, "us_per_call": round(us, 2),
+                    **_parse_derived(d)} for n, us, d in ROWS],
+    }
+    if extra:
+        doc.update(extra)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=False)
+        f.write("\n")
+    print(f"wrote {path} ({len(doc['passes'])} passes)")
+    return doc

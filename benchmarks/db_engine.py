@@ -20,6 +20,17 @@ Demonstrates the database-perspective payoff on the paper's hg38 dataset
                       vs the plaintext reference — BENCH json tracks the
                       float path next to the integer one
 
+  * sharded pass   — the same filter + top-k plan on a ShardedTable at
+                      1 vs 4 shards: per-shard scan compares must drop
+                      to 1/S of the single-device count while the
+                      cross-shard top-k merge stays O(k·S) — the
+                      distributed-execution contract, asserted here and
+                      recorded in the JSON trajectory
+
+Every pass lands in BENCH_db.json (machine-readable: wall-clock,
+rows/s, compare counts per pass) so the perf trajectory is tracked
+across PRs — benchmarks/common.write_json.
+
 Default profile is test-bfv in paper mode with the Thm 4.1 zero-weight
 CEK precondition (exact compares, ~6x faster than gadget mode — the op
 *count* comparison is mode-independent).  Pass mode="gadget" for the
@@ -36,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_json
 from repro import db
 from repro.core import encrypt as E
 from repro.core.keys import keygen
@@ -284,6 +295,88 @@ def run_ckks(profile: str = "test-ckks", mode: str = "gadget",
          f"rows={n};matched={int(want_mask.sum())};exact={exact}")
 
 
+def run_sharded(profile: str = "test-bfv", mode: str = "paper",
+                rows: int | None = None, k: int = 8,
+                shards: tuple = (1, 4), tag: str = "db.shard") -> dict:
+    """Sharded vs single-device filter + top-k on hg38.
+
+    The distributed-execution contract in numbers: at S shards each
+    shard scans A·N_sp ≈ A·n/S rows (1/S of the single-device fused
+    scan) and the per-shard top-k networks shrink the same way, while
+    the cross-shard merge adds only O(kp·S·log kp) compares — recorded
+    per pass and summarized (with the ratio checks) for BENCH_db.json.
+    """
+    ks = _keys(profile, mode)
+    params = ks.params
+    vals = load_dataset("hg38", scheme="bfv", t=params.t)
+    if rows:
+        vals = vals[:rows]
+    vals = vals.astype(np.int64)
+    n = len(vals)
+    lo, hi = (int(np.percentile(vals, 30)), int(np.percentile(vals, 70)))
+    query = db.Query(
+        where=db.Range("v", _enc(ks, lo, 5), _enc(ks, hi, 6)),
+        top_k=db.TopK("v", k))
+    want_mask = (vals >= lo) & (vals <= hi)
+    want_top = sorted(vals[want_mask].tolist(), reverse=True)[:k]
+
+    summary: dict = {"dataset": "hg38", "rows": n, "k": k, "mode": mode}
+    for S in shards:
+        spec = db.ShardSpec.create(S)
+        t0 = time.perf_counter()
+        st = db.ShardedTable.from_arrays(ks, "hg38", {"v": vals},
+                                         jax.random.PRNGKey(2), spec=spec)
+        emit(f"{tag}.s{S}.encrypt", (time.perf_counter() - t0) * 1e6,
+             f"shards={S};devices={spec.mesh_devices};"
+             f"block={st.n_padded_per_shard}")
+        db.execute(ks, st, query)                        # warm the launches
+        wall, res = _timed(lambda: db.execute(ks, st, query), reps=2)
+        exact = (np.array_equal(res.mask, want_mask)
+                 and vals[res.row_ids].tolist() == want_top)
+        stats = res.stats
+        emit(f"{tag}.s{S}.filter_topk", wall * 1e6,
+             f"rows_per_s={n / wall:.0f};scan_compares={stats.scan_compares};"
+             f"per_shard_scan={stats.per_shard_scan_compares};"
+             f"per_shard_order={stats.per_shard_order_compares};"
+             f"merge_compares={stats.merge_compares};exact={exact}")
+        summary[f"s{S}"] = {
+            "devices": spec.mesh_devices,
+            "wall_s": round(wall, 3),
+            "rows_per_s": round(n / wall),
+            "scan_compares": stats.scan_compares,
+            "per_shard_scan_compares": stats.per_shard_scan_compares,
+            "per_shard_order_compares": stats.per_shard_order_compares,
+            "merge_compares": stats.merge_compares,
+            "exact": bool(exact),
+        }
+    # the acceptance ratios, checked where they are produced.  The
+    # expected numbers follow the engine's documented pow2 geometry:
+    # per-shard scans cover next_pow2(ceil(n/S)) rows and the merge
+    # tournament runs over next_pow2(S) kp-blocks (non-pow2 shard
+    # counts pad with sentinel blocks), so non-pow2 --shards don't
+    # report spurious failures.
+    from repro.core.compare import next_pow2
+    s_lo, s_hi = min(shards), max(shards)
+    base = summary[f"s{s_lo}"]
+    top = summary[f"s{s_hi}"]
+    kp = next_pow2(k)
+    sp = next_pow2(s_hi)
+    merge_bound = (sp - 1) * (kp + (kp // 2) * max(1, kp.bit_length() - 1))
+    summary["per_shard_scan_ratio"] = round(
+        top["per_shard_scan_compares"] / base["per_shard_scan_compares"], 4)
+    want_ratio = (next_pow2(-(-n // s_hi)) / next_pow2(-(-n // s_lo)))
+    summary["per_shard_scan_ratio_ok"] = bool(
+        abs(summary["per_shard_scan_ratio"] - want_ratio) < 1e-9)
+    summary["merge_bound_k_s"] = merge_bound
+    summary["merge_within_bound"] = bool(top["merge_compares"] <= merge_bound)
+    emit(f"{tag}.summary", 0.0,
+         f"scan_ratio={summary['per_shard_scan_ratio']};"
+         f"ratio_ok={summary['per_shard_scan_ratio_ok']};"
+         f"merge={top['merge_compares']};bound={merge_bound};"
+         f"merge_ok={summary['merge_within_bound']}")
+    return summary
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="test-bfv")
@@ -292,8 +385,26 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--ckks-rows", type=int, default=1024,
                     help="rows for the float-column pass (0 = skip)")
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 4],
+                    help="shard counts for the sharded pass (empty = skip)")
+    ap.add_argument("--topk", type=int, default=8,
+                    help="k for the sharded filter+topk pass")
+    ap.add_argument("--json", default="BENCH_db.json",
+                    help="machine-readable output path ('' = skip)")
     args = ap.parse_args()
     run(profile=args.profile, mode=args.mode, rows=args.rows,
         queries=args.queries)
+    sharded_summary = None
+    if args.shards:
+        sharded_summary = run_sharded(profile=args.profile, mode=args.mode,
+                                      rows=args.rows, k=args.topk,
+                                      shards=tuple(args.shards))
     if args.ckks_rows:
         run_ckks(rows=args.ckks_rows, queries=max(2, args.queries // 2))
+    if args.json:
+        write_json(args.json,
+                   meta={"benchmark": "db_engine", "profile": args.profile,
+                         "mode": args.mode, "rows_arg": args.rows,
+                         "backend": jax.default_backend(),
+                         "devices": jax.device_count()},
+                   extra={"sharded": sharded_summary})

@@ -135,6 +135,14 @@ def range_query(ks: KeySet, column: Ciphertext, ct_lo: Ciphertext,
     return (cmp[0] >= 0) & (cmp[1] <= 0)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (n >= 1).  THE pow2-padding geometry:
+    table ingest, sort/top-k sentinel padding and the sharded merge
+    networks all size their rows through this one helper, so their
+    padded shapes can never drift apart."""
+    return 1 << max(0, (int(n) - 1).bit_length())
+
+
 def _bitonic_pairs(n: int):
     """Yield (stage) index arrays for a bitonic sorting network over n=2^k."""
     import numpy as np
@@ -158,17 +166,21 @@ def bitonic_compare_count(n: int) -> int:
     n-row column (after its padding to 2^ceil(log2 n)).  Kept next to
     `_bitonic_pairs` so stats/benchmark counts stay definitionally tied
     to the network actually run."""
-    n_pad = 1 << max(0, (n - 1).bit_length())
+    n_pad = next_pow2(n)
     stages = sum(range(1, n_pad.bit_length()))
     return stages * (n_pad // 2)
 
 
 def _pad_to_pow2(ks: KeySet, column: Ciphertext, pad_value: int,
-                 pad_key: Optional[jax.Array]) -> Tuple[Ciphertext, int]:
+                 pad_key: Optional[jax.Array], *,
+                 n_target: Optional[int] = None) -> Tuple[Ciphertext, int]:
     """Append encrypted `pad_value` sentinel rows up to the next power of
-    two.  Returns (padded column, original row count)."""
+    two (or to an explicit power-of-two `n_target` — the sharded merge
+    networks pad every shard's candidates to one common block size).
+    Returns (padded column, original row count)."""
     n_rows = column.c0.shape[0]
-    n_pad = 1 << (n_rows - 1).bit_length()
+    n_pad = n_target if n_target is not None else next_pow2(n_rows)
+    assert n_pad >= n_rows and n_pad == next_pow2(n_pad)
     if n_pad == n_rows:
         return column, n_rows
     key = pad_key if pad_key is not None else jax.random.PRNGKey(_PAD_KEY_SEED)
@@ -283,7 +295,7 @@ def encrypted_topk(ks: KeySet, column: Ciphertext, k: int,
     orig = column
     n_rows = column.c0.shape[0]
     k = min(k, n_rows)
-    kp = 1 << max(0, (k - 1).bit_length())          # power-of-two block
+    kp = next_pow2(k)                               # power-of-two block
     if pad_value is None:
         pad_value = -(ks.params.max_operand // 2)
     column, n_rows = _pad_to_pow2(ks, column, pad_value, pad_key)

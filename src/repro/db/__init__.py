@@ -11,6 +11,10 @@ plan stage into one batched Eval, and a batched multi-query server.
     compile_plan / execute — lower + run a plan (indexes optional)
     QueryServer  — K client queries against one table in one fused pass
 
+Sharded variants (repro.db.shard): ShardSpec / ShardedTable /
+ShardedIndex / ShardedQueryServer partition rows across a device mesh
+with cross-shard merge stages; `execute` dispatches automatically.
+
 The comparison primitives themselves (range_query, encrypted_sort,
 encrypted_topk) live in core/compare.py and are re-exported here — the
 engine is a consumer of those ops, existing callers keep working.
@@ -49,10 +53,19 @@ from repro.db.plan import (  # noqa: F401
 from repro.db.table import Table  # noqa: F401
 
 
+_SHARD_EXPORTS = ("ShardSpec", "ShardedTable", "ShardedIndex",
+                  "ShardedQueryServer", "ShardedExecStats",
+                  "execute_sharded")
+
+
 def __getattr__(name):
     # lazy: keeps `python -m repro.db.query_serve` free of the runpy
-    # double-import warning while preserving `db.QueryServer`
+    # double-import warning while preserving `db.QueryServer`; the shard
+    # subsystem loads on first use for the same reason
     if name == "QueryServer":
         from repro.db.query_serve import QueryServer
         return QueryServer
+    if name in _SHARD_EXPORTS:
+        from repro.db import shard as _shard
+        return getattr(_shard, name)
     raise AttributeError(name)

@@ -269,8 +269,8 @@ def _sort_compares(n: int) -> int:
 
 
 def _topk_compares(n: int, k: int) -> int:
-    n_pad = 1 << max(0, (n - 1).bit_length())
-    kp = 1 << max(0, (k - 1).bit_length())
+    n_pad = C.next_pow2(n)
+    kp = C.next_pow2(k)
     if kp >= n_pad:
         return _sort_compares(n_pad)
     total = sum(range(1, kp.bit_length())) * (n_pad // 2)  # block sorts
@@ -282,10 +282,23 @@ def _topk_compares(n: int, k: int) -> int:
     return total
 
 
-def execute(ks: KeySet, table: Table, query, *,
+def execute(ks: KeySet, table, query, *,
             indexes: Optional[Dict[str, SortedIndex]] = None,
             engine: str = "jnp") -> QueryResult:
-    """Run a Query (or bare predicate / precompiled plan) against a table."""
+    """Run a Query (or bare predicate / precompiled plan) against a table.
+
+    Accepts a `Table` or a `ShardedTable` — sharded tables dispatch to
+    the shard-parallel executor (`db.shard.execute_sharded`; their
+    `indexes` must then be `ShardedIndex` instances), so call sites stay
+    placement-agnostic."""
+    import sys
+    # sys.modules guard keeps non-shard users import-free: a ShardedTable
+    # argument implies repro.db.shard.table is already loaded
+    shard_mod = sys.modules.get("repro.db.shard.table")
+    if shard_mod is not None and isinstance(table, shard_mod.ShardedTable):
+        from repro.db.shard.executor import execute_sharded
+        return execute_sharded(ks, table, query, indexes=indexes,
+                               engine=engine)
     if isinstance(query, (P.Query, P.Predicate)):
         plan = P.compile_plan(query)
     elif isinstance(query, P.CompiledPlan):

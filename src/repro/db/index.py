@@ -42,6 +42,16 @@ def _stack_cts(cts) -> Ciphertext:
                       jnp.stack([ct.c1 for ct in cts]))
 
 
+def eps_lane_taus(ks: KeySet, eps: Optional[float]) -> Optional[np.ndarray]:
+    """The [lower, upper] boundary-lane decode thresholds an ε-band
+    predicate resolves to (None = profile default) — one implementation
+    for SortedIndex and the sharded fan-out index."""
+    if eps is None:
+        return None
+    tau = eps_to_tau(ks.params, eps)
+    return np.asarray([tau, tau], dtype=np.int64)
+
+
 class SortedIndex:
     """Sorted ciphertext column + permutation, with encrypted binary search."""
 
@@ -128,10 +138,7 @@ class SortedIndex:
         return lo
 
     def _eps_taus(self, ks: KeySet, eps: Optional[float]) -> Optional[np.ndarray]:
-        if eps is None:
-            return None
-        tau = eps_to_tau(ks.params, eps)
-        return np.asarray([tau, tau], dtype=np.int64)
+        return eps_lane_taus(ks, eps)
 
     def search_range(self, ks: KeySet, ct_lo: Ciphertext, ct_hi: Ciphertext,
                      *, eps: Optional[float] = None) -> np.ndarray:

@@ -1,0 +1,29 @@
+"""repro.db.shard — mesh-sharded encrypted tables for the query engine.
+
+Partitions ciphertext rows across logical shards placed on a 1-D device
+mesh (`ShardSpec`, decoupled from physical devices), runs fused filter
+stages shard-parallel under `shard_map`, resolves OrderBy/TopK with
+per-shard bitonic networks + log-depth cross-shard merge networks, and
+fans lookups out over per-shard sorted indexes in one lane-batched
+launch.  Invariance contract: decrypted query answers are independent
+of the shard count and the placement.
+
+    ShardSpec          — logical shard count + optional device mesh
+    ShardedTable       — [S, N_sp, ...] stacked encrypted columns
+    ShardedIndex       — per-shard SortedIndexes, fan-out binary search
+    execute_sharded    — the sharded plan executor (db.execute dispatches
+                         here automatically for ShardedTable arguments)
+    ShardedQueryServer — K queries x S shards in one vectorized pass
+"""
+from repro.db.shard.executor import (  # noqa: F401
+    ShardedExecStats,
+    execute_sharded,
+    sharded_fused_eval,
+)
+from repro.db.shard.index import ShardedIndex  # noqa: F401
+from repro.db.shard.serve import (  # noqa: F401
+    ShardedBatchStats,
+    ShardedQueryServer,
+)
+from repro.db.shard.spec import ShardSpec  # noqa: F401
+from repro.db.shard.table import ShardedTable  # noqa: F401

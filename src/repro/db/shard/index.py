@@ -1,0 +1,176 @@
+"""`ShardedIndex`: one HADES sorted index per shard, probed fan-out.
+
+Build is batched across shards: every shard's valid rows pad to one
+common block and ONE tiled bitonic network sorts all shards together
+(each stage a single batched Eval — `merge.shard_block_sort`), then the
+per-shard `SortedIndex` objects are carved out by id-stripping.
+
+Lookups broadcast the client's encrypted trapdoor to every shard and
+binary-search ALL shards' indexes in one lane-batched launch: a probe
+step evaluates the `[S, B]` grid of (shard, lane) probes in one Eval,
+so a range query over S shards still costs only ~log₂(max shard size)
+launches.  Boundary lanes then combine per shard into local row masks
+(the executor lifts them to the global mask).  Per-lane decode
+thresholds ride exactly as in `SortedIndex.search` — ε-band lanes work
+unchanged.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compare as C
+from repro.core.encrypt import Ciphertext
+from repro.core.keys import KeySet
+from repro.db.index import SortedIndex, _stack_cts, eps_lane_taus
+from repro.db.shard import merge as M
+from repro.db.shard.table import ShardedTable
+from repro.db.table import rows_to_mask
+
+
+class ShardedIndex:
+    """Per-shard SortedIndexes + stacked sorted rows for fan-out probes."""
+
+    def __init__(self, column: str, shards: List[SortedIndex], *,
+                 build_compares: int = 0):
+        self.column = column
+        self.shards = shards
+        self.counts = np.asarray([ix.n_rows for ix in shards], np.int64)
+        self.build_compares = build_compares
+        self.search_compares = 0
+        n_max = int(self.counts.max())
+        c0s, c1s = [], []
+        for ix in shards:
+            c0, c1 = ix.sorted_ct.c0, ix.sorted_ct.c1
+            pad = n_max - c0.shape[0]
+            if pad:   # never probed (hi is clamped to the shard's count)
+                c0 = jnp.concatenate([c0, jnp.zeros((pad,) + c0.shape[1:],
+                                                    c0.dtype)])
+                c1 = jnp.concatenate([c1, jnp.zeros((pad,) + c1.shape[1:],
+                                                    c1.dtype)])
+            c0s.append(c0)
+            c1s.append(c1)
+        self._sorted = Ciphertext(jnp.stack(c0s), jnp.stack(c1s))  # [S,Nm,..]
+        self._cmp: Optional[Callable] = None
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, ks: KeySet, stable: ShardedTable,
+              column: str) -> "ShardedIndex":
+        """Sort every shard's column in ONE batched per-shard network."""
+        S = stable.num_shards
+        block = C.next_pow2(int(stable.shard_rows.max()))
+        per_shard = []
+        for s in range(S):
+            m = int(stable.shard_rows[s])
+            per_shard.append((stable.gather(column, s, np.arange(m)),
+                              np.arange(m, dtype=np.int64)))
+        ct, ids = M.pad_shard_blocks(ks, per_shard, block=block,
+                                     pad_value=ks.params.max_operand // 2,
+                                     num_blocks=S)
+        from repro.db.executor import jitted_comparator
+        c0, c1, gid, compares = M.shard_block_sort(
+            ks, jitted_comparator(ks), ct.c0, ct.c1, jnp.asarray(ids),
+            block=block)
+        gid = np.asarray(gid)
+        shards = []
+        for s in range(S):
+            sl = slice(s * block, (s + 1) * block)
+            keep = np.nonzero(gid[sl] >= 0)[0] + s * block
+            shards.append(SortedIndex(
+                column, Ciphertext(c0[keep], c1[keep]), gid[keep],
+                # each shard rode a block-row network (the common padded
+                # block, not its own row count) — attribute that share so
+                # per-shard counts sum to the batched total
+                build_compares=C.bitonic_compare_count(block)))
+        return cls(column, shards, build_compares=compares)
+
+    # -- fan-out search ----------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        return len(self.shards)
+
+    def _eval(self, ks: KeySet) -> Callable:
+        if self._cmp is None:
+            self._cmp = jax.jit(lambda a, b: C.eval_value(ks, a, b))
+        return self._cmp
+
+    def search(self, ks: KeySet, values: Ciphertext, strict: np.ndarray,
+               taus: Optional[np.ndarray] = None) -> np.ndarray:
+        """Fan-out boundary search: B lanes against ALL S shards.
+
+        values: trapdoor ciphertexts with leading batch dim B — sent
+        ONCE by the client, broadcast to every shard server-side.
+        Returns [S, B] sorted positions; every binary-search step is ONE
+        batched Eval over the S·B live probes.  strict/taus semantics
+        match `SortedIndex.search` lane for lane.
+        """
+        strict = np.asarray(strict, bool)
+        B = values.c0.shape[0]
+        assert strict.shape == (B,)
+        if taus is None:
+            taus = np.full(B, ks.params.tau, dtype=np.int64)
+        taus = np.asarray(taus, np.int64)
+        assert taus.shape == (B,)
+        S = self.num_shards
+        ev = self._eval(ks)
+        lo = np.zeros((S, B), np.int64)
+        hi = np.broadcast_to(self.counts[:, None], (S, B)).copy()
+        s_idx = np.arange(S)[:, None]
+        probes = 0
+        while np.any(lo < hi):
+            active = lo < hi
+            mid = (lo + hi) // 2
+            probe = np.where(active, mid, 0)
+            rows = Ciphertext(self._sorted.c0[s_idx, probe],
+                              self._sorted.c1[s_idx, probe])   # [S, B, ...]
+            v = np.asarray(ev(rows, values))                   # [S, B] raw
+            c = np.where(np.abs(v) < taus[None, :], 0, np.sign(v))
+            probes += int(active.sum())
+            go_left = np.where(strict[None, :], c > 0, c >= 0)
+            hi = np.where(active & go_left, mid, hi)
+            lo = np.where(active & ~go_left, mid + 1, lo)
+        self.search_compares += probes
+        return lo
+
+    # -- leaf resolution (executor plumbing) -------------------------------
+
+    def _eps_taus(self, ks: KeySet,
+                  eps: Optional[float]) -> Optional[np.ndarray]:
+        return eps_lane_taus(ks, eps)
+
+    def lane_masks(self, pos: np.ndarray, lane: int,
+                   n_padded: int) -> List[np.ndarray]:
+        """Boundary lane pair (2·lane, 2·lane+1) -> per-shard local row
+        masks (shared by executor and ShardedQueryServer)."""
+        out = []
+        for s in range(self.num_shards):
+            l, r = int(pos[s, 2 * lane]), int(pos[s, 2 * lane + 1])
+            out.append(rows_to_mask(self.shards[s].perm[l:r], n_padded))
+        return out
+
+    def shard_masks_range(self, ks: KeySet, ct_lo: Ciphertext,
+                          ct_hi: Ciphertext, n_padded: int, *,
+                          eps: Optional[float] = None) -> List[np.ndarray]:
+        bounds = _stack_cts([ct_lo, ct_hi])
+        pos = self.search(ks, bounds, np.array([False, True]),
+                          self._eps_taus(ks, eps))
+        return self.lane_masks(pos, 0, n_padded)
+
+    def shard_masks_eq(self, ks: KeySet, ct_value: Ciphertext,
+                       n_padded: int, *,
+                       eps: Optional[float] = None) -> List[np.ndarray]:
+        bounds = _stack_cts([ct_value, ct_value])
+        pos = self.search(ks, bounds, np.array([False, True]),
+                          self._eps_taus(ks, eps))
+        return self.lane_masks(pos, 0, n_padded)
+
+    def __repr__(self) -> str:
+        return (f"ShardedIndex({self.column!r}, shards={self.num_shards}, "
+                f"rows={self.counts.tolist()}, "
+                f"build_compares={self.build_compares})")

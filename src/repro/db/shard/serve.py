@@ -1,0 +1,169 @@
+"""`ShardedQueryServer`: K client queries × S shards in one pass.
+
+The `db.query_serve.QueryServer` queue/batch pattern lifted onto a
+`ShardedTable`: a drained batch of K queries routes to ALL shards in a
+single vectorized sweep —
+
+  * every scan atom of every query joins ONE `[S, ΣA_i, N_sp]`
+    shard-parallel raw-eval launch (`shard_map` on a usable mesh);
+  * every index-eligible leaf joins ONE fan-out binary search per
+    indexed column — the `[S, 2K]` probe grid resolves all queries'
+    boundary lanes against all shards' indexes together, each step one
+    batched Eval;
+  * per-query combine / merge-order stages then run on each query's
+    global mask (cross-shard top-k and order-by via the merge networks).
+
+So K clients querying an S-shard table still cost one fused filter
+launch + one lane-batched search per indexed column per batch — the
+shard dim rides inside the launches instead of multiplying them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ckks import eps_to_tau
+from repro.core.keys import KeySet
+from repro.db import executor as X
+from repro.db import plan as P
+from repro.db.index import _stack_cts
+from repro.db.shard import executor as SX
+from repro.db.shard.index import ShardedIndex
+from repro.db.shard.table import ShardedTable
+
+
+@dataclasses.dataclass
+class ShardedBatchStats:
+    queries: int = 0
+    shards: int = 0
+    eval_calls: int = 0
+    scan_compares: int = 0
+    per_shard_scan_compares: int = 0
+    index_compares: int = 0
+    merge_compares: int = 0
+    wall_s: float = 0.0
+
+
+class ShardedQueryServer:
+    """Queue + batch executor over one sharded encrypted table."""
+
+    def __init__(self, ks: KeySet, stable: ShardedTable, *,
+                 indexes: Optional[Dict[str, ShardedIndex]] = None,
+                 batch: int = 4, engine: str = "jnp"):
+        self.ks = ks
+        self.stable = stable
+        self.indexes = indexes or {}
+        self.batch = int(batch)
+        self.engine = engine
+        self._queue: List[Tuple[int, P.Query]] = []
+        self._next_id = 0
+        self.batch_log: List[ShardedBatchStats] = []
+
+    # -- queue -------------------------------------------------------------
+
+    def submit(self, query) -> int:
+        if isinstance(query, P.Predicate):
+            query = P.Query(where=query)
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, query))
+        return qid
+
+    def run(self) -> Dict[int, X.QueryResult]:
+        results: Dict[int, X.QueryResult] = {}
+        while self._queue:
+            chunk, self._queue = (self._queue[:self.batch],
+                                  self._queue[self.batch:])
+            results.update(self._run_batch(chunk))
+        return results
+
+    # -- batch execution ---------------------------------------------------
+
+    def _run_batch(self, chunk: List[Tuple[int, P.Query]],
+                   ) -> Dict[int, X.QueryResult]:
+        t0 = time.perf_counter()
+        ks, stable = self.ks, self.stable
+        S, N = stable.num_shards, stable.n_padded_per_shard
+        plans = [(qid, P.compile_plan(q)) for qid, q in chunk]
+        bstats = ShardedBatchStats(queries=len(chunk), shards=S)
+
+        # partition leaves into fan-out index lanes vs scan atoms
+        scan_atoms: List[P.Atom] = []
+        scan_ref: List[Tuple[int, int, int, int]] = []
+        lane_cts: Dict[str, list] = {}
+        lane_strict: Dict[str, list] = {}
+        lane_taus: Dict[str, list] = {}
+        lane_ref: Dict[str, list] = {}
+        for pi, (_, plan) in enumerate(plans):
+            for li, leaf in enumerate(plan.leaves):
+                idx = self.indexes.get(leaf.column)
+                if idx is not None:
+                    lo, hi = ((leaf.lo, leaf.hi)
+                              if isinstance(leaf, P.Range)
+                              else (leaf.value, leaf.value))
+                    tau = (ks.params.tau if leaf.eps is None
+                           else eps_to_tau(ks.params, leaf.eps))
+                    lane_cts.setdefault(leaf.column, []).extend([lo, hi])
+                    lane_strict.setdefault(leaf.column, []).extend(
+                        [False, True])
+                    lane_taus.setdefault(leaf.column, []).extend([tau, tau])
+                    lane_ref.setdefault(leaf.column, []).append((pi, li))
+                else:
+                    atoms = plan.scan_atoms(li)
+                    scan_ref.append((pi, li, len(scan_atoms), len(atoms)))
+                    scan_atoms.extend(atoms)
+
+        leaf_masks: List[List[Optional[List[np.ndarray]]]] = [
+            [None] * plan.num_leaves for _, plan in plans]
+        qstats = [SX.ShardedExecStats(shards=S,
+                                      mesh_devices=stable.spec.mesh_devices)
+                  for _ in plans]
+
+        # ONE fan-out search per indexed column: all queries' boundary
+        # lanes against all shards' indexes together ([S, 2K] probe grid)
+        for column, cts in lane_cts.items():
+            idx = self.indexes[column]
+            before = idx.search_compares
+            pos = idx.search(ks, _stack_cts(cts),
+                             np.asarray(lane_strict[column]),
+                             np.asarray(lane_taus[column], np.int64))
+            bstats.index_compares += idx.search_compares - before
+            for j, (pi, li) in enumerate(lane_ref[column]):
+                leaf_masks[pi][li] = idx.lane_masks(pos, j, N)
+                qstats[pi].indexed_leaves += 1
+
+        # ONE shard-parallel fused Eval for every scan atom in the batch
+        if scan_atoms:
+            vals = SX.sharded_fused_eval(ks, stable, scan_atoms,
+                                         engine=self.engine)
+            bstats.eval_calls += 1
+            bstats.scan_compares += len(scan_atoms) * S * N
+            bstats.per_shard_scan_compares += len(scan_atoms) * N
+            for pi, li, start, count in scan_ref:
+                leaf_masks[pi][li] = [
+                    X.scan_leaf_mask(ks, scan_atoms, vals[s], start, count)
+                    for s in range(S)]
+                qstats[pi].scan_leaves += 1
+                qstats[pi].scan_compares += count * S * N
+                qstats[pi].per_shard_scan_compares += count * N
+                qstats[pi].eval_calls = 1
+
+        # per-query combine + merge-order/limit/project
+        results: Dict[int, X.QueryResult] = {}
+        for pi, (qid, plan) in enumerate(plans):
+            stats = qstats[pi]
+            mask = SX.combine_shard_masks(stable, plan, leaf_masks[pi])
+            row_ids = np.nonzero(mask)[0]
+            row_ids = SX.order_rows_sharded(ks, stable, plan.query,
+                                            row_ids, stats)
+            columns = {c: stable.gather_global(c, row_ids)
+                       for c in plan.query.select}
+            bstats.merge_compares += stats.merge_compares
+            results[qid] = X.QueryResult(row_ids=row_ids, mask=mask,
+                                         columns=columns, stats=stats)
+        bstats.wall_s = time.perf_counter() - t0
+        self.batch_log.append(bstats)
+        return results

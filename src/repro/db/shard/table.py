@@ -1,0 +1,200 @@
+"""`ShardedTable`: an encrypted column-store partitioned across shards.
+
+Rows split into S contiguous, balanced chunks; every chunk pads to ONE
+common power-of-two block size N_sp (`pad_rows_pow2` — the same helper
+and sentinel-geometry `Table` uses), so each column is a single stacked
+ciphertext `[S, N_sp, K, n]` whose leading dim places on the shard mesh
+(`ShardSpec.place`).  Uneven partitions (non-power-of-two row counts)
+just mean shards carry different validity masks over the same block
+size — static shapes survive, which is what lets every fused filter
+stage compile once and run shard-parallel.
+
+Global row ids are the original ingest order: shard s owns the
+contiguous id range [offsets[s], offsets[s+1]), so `from_table` — which
+re-partitions an existing `Table`'s ciphertext ROWS without touching
+plaintext — produces bit-identical per-row ciphertexts, the anchor of
+the byte-level shard-invariance tests.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encrypt as E
+from repro.core.compare import next_pow2
+from repro.core.encrypt import Ciphertext
+from repro.core.keys import KeySet
+from repro.db.shard.spec import ShardSpec
+from repro.db.table import Table
+
+
+def partition_offsets(n_rows: int, num_shards: int) -> np.ndarray:
+    """[S+1] contiguous balanced split boundaries (first n%S chunks get
+    the extra row)."""
+    if not (1 <= num_shards <= n_rows):
+        raise ValueError(
+            f"num_shards {num_shards} outside [1, {n_rows}] rows")
+    base, extra = divmod(n_rows, num_shards)
+    sizes = np.full(num_shards, base, np.int64)
+    sizes[:extra] += 1
+    return np.concatenate([[0], np.cumsum(sizes)])
+
+
+class ShardedTable:
+    """Stacked encrypted columns `[S, N_sp, ...]` + partition bookkeeping."""
+
+    def __init__(self, name: str, columns: Dict[str, Ciphertext],
+                 offsets: np.ndarray, spec: ShardSpec):
+        if not columns:
+            raise ValueError("sharded table needs at least one column")
+        shapes = {c: ct.c0.shape[:2] for c, ct in columns.items()}
+        S, n_sp = next(iter(shapes.values()))
+        if any(v != (S, n_sp) for v in shapes.values()):
+            raise ValueError(f"ragged column stacks: {shapes}")
+        if S != spec.num_shards:
+            raise ValueError(f"stack has {S} shards, spec {spec.num_shards}")
+        if n_sp != next_pow2(n_sp):
+            raise ValueError(f"per-shard block {n_sp} not a power of two")
+        self.name = name
+        self.columns = dict(columns)
+        self.offsets = np.asarray(offsets, np.int64)
+        self.spec = spec
+        self.shard_rows = np.diff(self.offsets)          # [S] valid counts
+        if int(self.shard_rows.max()) > n_sp or int(self.shard_rows.min()) < 1:
+            raise ValueError(
+                f"shard sizes {self.shard_rows} outside (0, {n_sp}]")
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def from_arrays(cls, ks: KeySet, name: str,
+                    data: Dict[str, np.ndarray], key: jax.Array, *,
+                    spec: ShardSpec) -> "ShardedTable":
+        """Encrypt host arrays straight into the sharded layout.
+
+        Each shard's chunk encrypts under its own fold_in key via
+        `Table.from_arrays` (one batched encrypt per column per shard),
+        all padded to the common N_sp block.
+        """
+        n_rows = len(next(iter(data.values())))
+        offsets = partition_offsets(n_rows, spec.num_shards)
+        n_sp = next_pow2(int(np.diff(offsets).max()))
+        stacks: Dict[str, list] = {c: [] for c in data}
+        for s in range(spec.num_shards):
+            lo, hi = int(offsets[s]), int(offsets[s + 1])
+            chunk = {c: np.asarray(v)[lo:hi] for c, v in data.items()}
+            t = Table.from_arrays(ks, f"{name}.s{s}", chunk,
+                                  jax.random.fold_in(key, s), n_padded=n_sp)
+            for c in data:
+                stacks[c].append(t.columns[c])
+        columns = {c: Ciphertext(jnp.stack([ct.c0 for ct in cts]),
+                                 jnp.stack([ct.c1 for ct in cts]))
+                   for c, cts in stacks.items()}
+        return cls(name, spec.place(columns), offsets, spec)
+
+    @classmethod
+    def from_table(cls, ks: KeySet, table: Table, *,
+                   spec: ShardSpec) -> "ShardedTable":
+        """Re-partition an existing `Table`'s ciphertext rows (server-side:
+        slices existing encryptions, pads with public-key encryptions of 0
+        exactly like `Table` ingest — no plaintext access needed)."""
+        offsets = partition_offsets(table.n_rows, spec.num_shards)
+        n_sp = next_pow2(int(np.diff(offsets).max()))
+        pad_key = jax.random.PRNGKey(0x5AAD)
+        columns = {}
+        for ci, (cname, ct) in enumerate(table.columns.items()):
+            c0s, c1s = [], []
+            for s in range(spec.num_shards):
+                lo, hi = int(offsets[s]), int(offsets[s + 1])
+                c0, c1 = ct.c0[lo:hi], ct.c1[lo:hi]
+                if hi - lo < n_sp:
+                    # same pad semantics as `Table` ingest (pad_rows_pow2
+                    # with pad_value=0): genuine encryptions of 0, masked
+                    # out by shard validity
+                    pad = E.encrypt(
+                        ks, jnp.zeros(n_sp - (hi - lo), jnp.int64),
+                        jax.random.fold_in(pad_key, ci * 1024 + s))
+                    c0 = jnp.concatenate([c0, pad.c0])
+                    c1 = jnp.concatenate([c1, pad.c1])
+                c0s.append(c0)
+                c1s.append(c1)
+            columns[cname] = Ciphertext(jnp.stack(c0s), jnp.stack(c1s))
+        return cls(table.name, spec.place(columns), offsets, spec)
+
+    # -- geometry ----------------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        return int(self.spec.num_shards)
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.offsets[-1])
+
+    @property
+    def n_padded_per_shard(self) -> int:
+        return next(iter(self.columns.values())).c0.shape[1]
+
+    @property
+    def column_names(self) -> tuple:
+        return tuple(self.columns)
+
+    def shard_valid(self, s: int) -> np.ndarray:
+        """[N_sp] bool — data slots of shard s."""
+        return np.arange(self.n_padded_per_shard) < int(self.shard_rows[s])
+
+    def ciphertext_bytes(self) -> int:
+        return sum(ct.c0.nbytes + ct.c1.nbytes
+                   for ct in self.columns.values())
+
+    # -- row-id algebra ----------------------------------------------------
+
+    def global_ids(self, s: int) -> np.ndarray:
+        """[N_sp] global row id per slot of shard s (-1 on pad slots)."""
+        ids = np.arange(self.n_padded_per_shard) + int(self.offsets[s])
+        return np.where(self.shard_valid(s), ids, -1)
+
+    def locate(self, global_rows) -> tuple:
+        """global ids -> (shard idx, local slot idx) arrays."""
+        gids = np.asarray(global_rows, np.int64)
+        s = np.searchsorted(self.offsets[1:], gids, side="right")
+        return s, gids - self.offsets[s]
+
+    # -- access ------------------------------------------------------------
+
+    def shard(self, s: int) -> Table:
+        """Shard s as a plain `Table` view (per-shard index builds etc.)."""
+        cols = {c: Ciphertext(ct.c0[s], ct.c1[s])
+                for c, ct in self.columns.items()}
+        return Table(f"{self.name}.s{s}", cols, int(self.shard_rows[s]))
+
+    def gather(self, name: str, s: int, local_rows) -> Ciphertext:
+        """Ciphertext rows of shard s at local slot indices."""
+        idx = np.asarray(local_rows, np.int64)
+        ct = self.columns[name]
+        return Ciphertext(ct.c0[s, idx], ct.c1[s, idx])
+
+    def gather_global(self, name: str, global_rows) -> Ciphertext:
+        """Ciphertext rows at GLOBAL row ids (cross-shard projection)."""
+        s, slot = self.locate(global_rows)
+        ct = self.columns[name]
+        return Ciphertext(ct.c0[s, slot], ct.c1[s, slot])
+
+    def decrypt_column(self, ks: KeySet, name: str) -> np.ndarray:
+        """Client-side helper (tests only — needs sk): valid rows in
+        global id order."""
+        ct = self.columns[name]
+        vals = np.asarray(E.decrypt(
+            ks, Ciphertext(ct.c0.reshape((-1,) + ct.c0.shape[2:]),
+                           ct.c1.reshape((-1,) + ct.c1.shape[2:]))))
+        vals = vals.reshape(self.num_shards, self.n_padded_per_shard)
+        return np.concatenate([vals[s, :int(self.shard_rows[s])]
+                               for s in range(self.num_shards)])
+
+    def __repr__(self) -> str:
+        return (f"ShardedTable({self.name!r}, rows={self.n_rows}, "
+                f"shards={self.num_shards}x{self.n_padded_per_shard}, "
+                f"cols={list(self.columns)}, spec={self.spec})")

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import encrypt as E
+from repro.core.compare import next_pow2
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
 
@@ -30,6 +31,32 @@ def rows_to_mask(rows, n_padded: int) -> np.ndarray:
     mask = np.zeros(n_padded, bool)
     mask[np.asarray(rows, dtype=np.int64)] = True
     return mask
+
+
+def pad_rows_pow2(arr: np.ndarray, *, n_target: Optional[int] = None,
+                  pad_value: float = 0) -> np.ndarray:
+    """Pad a host column to a power-of-two row count — THE row-padding
+    implementation shared by `Table` and `ShardedTable` ingest.
+
+    `n_target` (default: `next_pow2(len(arr))`) lets a sharded table pad
+    every shard to one common block size so the stacks align.  Geometry
+    comes from the same `next_pow2` that sizes `encrypted_sort`'s
+    ciphertext-level sentinel padding (`core.compare._pad_to_pow2`), so
+    ingest padding and sort-network padding can never disagree about the
+    padded shape; the pad VALUE here is 0 (excluded via the validity
+    mask), while the sort networks pad with in-headroom sentinels.
+    """
+    arr = np.asarray(arr)
+    n_rows = arr.shape[0]
+    n_padded = next_pow2(n_rows) if n_target is None else int(n_target)
+    if n_padded < n_rows or n_padded != next_pow2(n_padded):
+        raise ValueError(
+            f"n_target {n_padded} must be a power of two >= {n_rows}")
+    is_float = np.issubdtype(arr.dtype, np.floating)
+    padded = np.full((n_padded,), pad_value,
+                     np.float64 if is_float else np.int64)
+    padded[:n_rows] = arr
+    return padded
 
 
 class Table:
@@ -56,7 +83,8 @@ class Table:
     @classmethod
     def from_arrays(cls, ks: KeySet, name: str,
                     data: Dict[str, np.ndarray], key: jax.Array, *,
-                    fae: bool = False) -> "Table":
+                    fae: bool = False,
+                    n_padded: Optional[int] = None) -> "Table":
         """Encrypt host arrays into a padded column-store.
 
         data: {column: [n_rows] int (bfv) or float (ckks)}.  Under a
@@ -66,13 +94,14 @@ class Table:
         values is rejected — it would silently truncate; use a ckks
         profile for float columns.  `fae=True` uses perturbation-aware
         encryption (Alg. 3) — note this trades away exact
-        Eq/point-lookup semantics by design.
+        Eq/point-lookup semantics by design.  `n_padded` overrides the
+        default next-power-of-two target (sharded tables pad every
+        shard to one common block size).
         """
         lengths = {c: len(v) for c, v in data.items()}
         n_rows = next(iter(lengths.values()))
         if any(v != n_rows for v in lengths.values()):
             raise ValueError(f"ragged input columns: {lengths}")
-        n_padded = 1 << (n_rows - 1).bit_length()
         enc = E.encrypt_fae if fae else E.encrypt
         is_float = ks.params.profile.scheme == "ckks"
         columns = {}
@@ -84,9 +113,9 @@ class Table:
                     f"column {cname!r}: fractional float values under a "
                     f"{ks.params.profile.scheme} profile would truncate — "
                     "use a ckks profile for float columns")
-            padded = np.zeros((n_padded,),
-                              np.float64 if is_float else np.int64)
-            padded[:n_rows] = arr
+            padded = pad_rows_pow2(
+                arr.astype(np.float64 if is_float else np.int64),
+                n_target=n_padded)
             columns[cname] = enc(ks, jnp.asarray(padded),
                                  jax.random.fold_in(key, i))
         return cls(name, columns, n_rows)

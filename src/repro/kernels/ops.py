@@ -96,3 +96,72 @@ def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
     v = eval_values(ks, ct0, ct1, block_b=block_b, interpret=interpret)
     return jnp.where(jnp.abs(v) < ks.params.tau,
                      0, jnp.sign(v)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# shard-aware eval entry (repro.db.shard)
+# ---------------------------------------------------------------------------
+
+try:  # jax >= 0.6 exports shard_map at top level
+    from jax import shard_map as _shard_map          # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def _ks_cache(ks: KeySet, name: str) -> dict:
+    """Per-KeySet jit cache (lifetime tied to the keyset, same pattern as
+    db/executor._jitted — duplicated here to keep kernels below db in the
+    layering)."""
+    cache = getattr(ks, name, None)
+    if cache is None:
+        cache = {}
+        object.__setattr__(ks, name, cache)
+    return cache
+
+
+def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
+                      mesh, axis_name: str = "shard",
+                      use_kernel: bool = False,
+                      block_b: int = NK.DEFAULT_BLOCK_B,
+                      interpret: bool | None = None) -> jax.Array:
+    """Shard-parallel raw eval values under `shard_map`.
+
+    ct0 leads with the shard dim — [S, ...batch, K, n], S divisible by
+    the mesh's `axis_name` size; ct1 is replicated to every device and
+    broadcast against ct0's batch dims inside each shard (the trapdoor
+    bounds of a fused filter stage).  HADES eval is row-local, so the
+    mapped program needs NO cross-shard collectives — each device runs
+    the eval pipeline over its own rows and only the decoded masks are
+    reduced host-side.  `use_kernel=True` routes the per-device compute
+    through the Pallas `cmp_eval` path (flattening local batch dims the
+    way the single-device kernel entry does).
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    from repro.core import compare as C
+
+    def local_eval(c00, c01, b0, b1):
+        if not use_kernel:
+            return C.eval_value(ks, Ciphertext(c00, c01),
+                                Ciphertext(b0, b1))
+        batch = c00.shape[:-2]
+        b0b = jnp.broadcast_to(b0, c00.shape)
+        b1b = jnp.broadcast_to(b1, c01.shape)
+        flat = lambda x: x.reshape((-1,) + x.shape[-2:])  # noqa: E731
+        v = eval_values(ks, Ciphertext(flat(c00), flat(c01)),
+                        Ciphertext(flat(b0b), flat(b1b)),
+                        block_b=block_b, interpret=interpret)
+        return v.reshape(batch)
+
+    from jax.sharding import PartitionSpec as P
+    nd0, nd1 = ct0.c0.ndim, ct1.c0.ndim
+    cache = _ks_cache(ks, "_shard_eval_cache")
+    key = (id(mesh), axis_name, use_kernel, interpret, block_b, nd0, nd1)
+    if key not in cache:
+        spec0 = P(axis_name, *([None] * (nd0 - 1)))
+        rep = P(*([None] * nd1))
+        out_spec = P(axis_name, *([None] * (nd0 - 3)))
+        fn = _shard_map(local_eval, mesh=mesh,
+                        in_specs=(spec0, spec0, rep, rep),
+                        out_specs=out_spec, check_rep=False)
+        cache[key] = jax.jit(fn)
+    return cache[key](ct0.c0, ct0.c1, ct1.c0, ct1.c1)

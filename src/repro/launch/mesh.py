@@ -12,7 +12,20 @@ from __future__ import annotations
 import math
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 (explicit-sharding axis types)
+    from jax.sharding import AxisType
+except ImportError:  # the baked jax 0.4.x: every mesh axis is Auto already
+    AxisType = None
+
+
+def _mesh(shape, axes, devices=None):
+    """jax.make_mesh across jax versions: pass axis_types only when the
+    installed jax knows about them (0.4.x predates AxisType)."""
+    kw = {"devices": devices} if devices is not None else {}
+    if AxisType is not None:
+        kw["axis_types"] = (AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -25,17 +38,34 @@ def make_production_mesh(*, multi_pod: bool = False):
             f"mesh {shape} needs {need} devices, have {len(devices)} — "
             "set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
             "BEFORE importing jax (launch/dryrun.py does this)")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes),
-                         devices=devices[:need])
+    return _mesh(shape, axes, devices[:need])
 
 
 def make_host_mesh(model_parallel: int = 1):
     """Small mesh over the real local devices (tests / CPU training)."""
     n = jax.device_count()
     dp = n // model_parallel
-    return jax.make_mesh((dp, model_parallel), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return _mesh((dp, model_parallel), ("data", "model"))
+
+
+def make_shard_mesh(num_shards: int, *, axis: str = "shard"):
+    """1-D device mesh for `repro.db.shard` tables.
+
+    Shard count is LOGICAL (chosen by the table's `ShardSpec`); this
+    picks d = the largest divisor of `num_shards` the host can supply,
+    so a `[num_shards, ...]`-leading ciphertext stack always places
+    evenly — 4 shards run 4-way on a v5e slice, 2-way on a 2-device
+    host, and degrade to one device without any caller change.
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    devices = jax.devices()
+    d = 1
+    for cand in range(min(num_shards, len(devices)), 0, -1):
+        if num_shards % cand == 0:
+            d = cand
+            break
+    return _mesh((d,), (axis,), devices[:d])
 
 
 # TPU v5e single-chip peaks (roofline constants; see brief)

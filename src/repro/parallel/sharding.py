@@ -164,6 +164,24 @@ def to_shardings(mesh: Mesh, specs: PyTree) -> PyTree:
                         is_leaf=lambda s: isinstance(s, P))
 
 
+def leading_sharding(mesh: Mesh, ndim: int,
+                     axis: str = "shard") -> NamedSharding:
+    """NamedSharding splitting an array's LEADING dim over `axis` (the
+    repro.db sharded-table layout: ciphertext stacks are [S, ...])."""
+    return NamedSharding(mesh, P(axis, *([None] * (ndim - 1))))
+
+
+def shard_leading(mesh: Mesh, tree: PyTree, axis: str = "shard") -> PyTree:
+    """device_put every array leaf with its leading dim split over `axis`.
+
+    Used by `db.shard.ShardSpec.place` to pin a sharded table's column
+    stacks to the mesh at ingest, so every later jitted eval launch runs
+    shard-parallel without resharding traffic."""
+    return jax.tree.map(
+        lambda x: jax.device_put(x, leading_sharding(mesh, x.ndim, axis)),
+        tree)
+
+
 def _axis_size(mesh: Mesh, entry) -> int:
     if entry is None:
         return 1

@@ -1,0 +1,356 @@
+"""repro.db.shard: shard invariance, merge networks, fan-out indexes.
+
+THE contract under test: for every plan, the decrypted answer — filter
+mask, ordered value sequence, projected ciphertext values — is
+IDENTICAL for 1, 2, and 4 shards (and a non-power-of-two 3), on both
+the bfv and ckks profiles, regardless of how unevenly the shards pad.
+`ShardedTable.from_table` re-partitions the SAME ciphertext rows, so
+filter masks must match the single-device executor byte for byte (same
+eval values, same thresholds); order stages guarantee the value
+sequence (tie ids may permute — the FAE coin-flip contract).
+
+Works at any device count: on a single CPU device the sharded executor
+falls back to one fused launch over the stacked [S, A, N_sp] batch; the
+CI multi-device job re-runs this file under
+XLA_FLAGS=--xla_force_host_platform_device_count=8, where 2- and
+4-shard tables place on a real mesh and the fused filter runs under
+shard_map — the assertions are placement-independent on purpose.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import db
+from repro.core import encrypt as E
+from repro.db.shard.table import partition_offsets
+
+GRID = 0.25        # ckks float grid (>> test-ckks equality tolerance)
+EPS_BAND = 0.3
+SHARD_COUNTS = (1, 2, 4)
+
+
+def _is_ckks(ks) -> bool:
+    return ks.params.profile.scheme == "ckks"
+
+
+def _vals(ks, ints) -> np.ndarray:
+    ints = np.asarray(ints)
+    if _is_ckks(ks):
+        return ints.astype(np.float64) * GRID
+    return ints.astype(np.int64)
+
+
+def _enc(ks, v, seed):
+    v = float(v) if _is_ckks(ks) else int(v)
+    return E.encrypt(ks, jnp.asarray(v), jax.random.PRNGKey(seed))
+
+
+def _bound(ks, v, side):
+    return float(v) + side * GRID / 2 if _is_ckks(ks) else int(v)
+
+
+def _sharded(ks, table, n_shards):
+    return db.ShardedTable.from_table(
+        ks, table, spec=db.ShardSpec.create(n_shards))
+
+
+# ---------------------------------------------------------------------------
+# partition / table geometry
+# ---------------------------------------------------------------------------
+
+def test_partition_offsets_balanced_and_contiguous():
+    off = partition_offsets(50, 4)
+    assert off.tolist() == [0, 13, 26, 38, 50]
+    assert partition_offsets(8, 1).tolist() == [0, 8]
+    with pytest.raises(ValueError):
+        partition_offsets(3, 4)          # more shards than rows
+
+
+def test_sharded_table_uneven_padding_roundtrip(scheme_ks):
+    """50 rows over 4 shards: chunks 13/13/12/12 all pad to ONE 16-row
+    block (uneven validity, uniform geometry) and decrypt losslessly."""
+    ks = scheme_ks
+    vals = _vals(ks, np.arange(50))
+    st = db.ShardedTable.from_arrays(ks, "t", {"v": vals},
+                                     jax.random.PRNGKey(0),
+                                     spec=db.ShardSpec.create(4))
+    assert st.n_padded_per_shard == 16
+    assert st.shard_rows.tolist() == [13, 13, 12, 12]
+    got = st.decrypt_column(ks, "v")
+    if _is_ckks(ks):
+        from repro.core.ckks import equality_tolerance
+        np.testing.assert_allclose(got, vals,
+                                   atol=equality_tolerance(ks.params))
+    else:
+        np.testing.assert_array_equal(got, vals)
+
+
+def test_from_table_reuses_ciphertext_rows(bfv_engine_ks):
+    """Re-partitioning moves the SAME ciphertexts — no re-encryption."""
+    ks = bfv_engine_ks
+    vals = np.arange(10, 31)             # 21 rows (non-pow2)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(1))
+    st = _sharded(ks, t, 2)
+    s_idx, slot = st.locate([0, 10, 11, 20])
+    assert s_idx.tolist() == [0, 0, 1, 1] and slot.tolist() == [0, 10, 0, 9]
+    for gid in (0, 10, 11, 20):
+        s, sl = st.locate([gid])
+        got = st.gather("v", int(s[0]), [int(sl[0])])
+        np.testing.assert_array_equal(np.asarray(got.c0[0]),
+                                      np.asarray(t.columns["v"].c0[gid]))
+
+
+def test_shard_spec_decouples_logical_from_devices():
+    spec = db.ShardSpec.create(4)
+    assert spec.num_shards == 4
+    assert spec.num_shards % spec.mesh_devices == 0     # always placeable
+    meshless = db.ShardSpec.create(3, use_mesh=False)
+    assert meshless.mesh_devices == 1 and not meshless.shard_map_ok
+    with pytest.raises(ValueError):
+        db.ShardSpec(num_shards=0)
+
+
+# ---------------------------------------------------------------------------
+# shard invariance: filters (byte-identical masks vs the single-device path)
+# ---------------------------------------------------------------------------
+
+def test_filter_masks_invariant_across_shard_counts(scheme_ks, rng):
+    """Eq / Range / And / Or / Not produce byte-identical masks for
+    every shard count — from_table shares rows with the reference table,
+    so even the raw eval values must agree."""
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 200, 53))
+    score = _vals(ks, rng.integers(0, 200, 53))
+    t = db.Table.from_arrays(ks, "t", {"v": vals, "s": score},
+                             jax.random.PRNGKey(2))
+    b = lambda v, s: _bound(ks, _vals(ks, np.asarray(v)), s)  # noqa: E731
+    queries = [
+        db.Eq("v", _enc(ks, vals[5], 0)),
+        db.Range("v", _enc(ks, b(40, -1), 1), _enc(ks, b(150, +1), 2)),
+        db.And(db.Range("v", _enc(ks, b(20, -1), 3),
+                        _enc(ks, b(170, +1), 4)),
+               db.Range("s", _enc(ks, b(0, -1), 5),
+                        _enc(ks, b(110, +1), 6))),
+        db.Or(db.Eq("s", _enc(ks, score[7], 7)),
+              db.Not(db.Range("v", _enc(ks, b(0, -1), 8),
+                              _enc(ks, b(120, +1), 9)))),
+    ]
+    for qi, q in enumerate(queries):
+        ref = db.execute(ks, t, q)
+        for n_shards in SHARD_COUNTS:
+            st = _sharded(ks, t, n_shards)
+            res = db.execute(ks, st, q)
+            assert isinstance(res.stats, db.ShardedExecStats)
+            np.testing.assert_array_equal(
+                res.mask, ref.mask,
+                err_msg=f"query {qi} mask differs at S={n_shards}")
+            np.testing.assert_array_equal(res.row_ids, ref.row_ids)
+            # whole predicate still ONE fused launch, per-shard slice 1/S
+            assert res.stats.eval_calls == 1
+            assert (res.stats.per_shard_scan_compares
+                    == res.stats.scan_compares // n_shards)
+
+
+def test_order_by_invariant_with_duplicates(scheme_ks, rng):
+    """OrderBy through per-shard sorts + cross-shard merge returns the
+    exact sorted value sequence (duplicates included) for every shard
+    count, ascending and descending."""
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 30, 41))     # heavy duplicates
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(3))
+    lo = _bound(ks, _vals(ks, 3), -1)
+    hi = _bound(ks, _vals(ks, 27), +1)
+    for desc in (False, True):
+        q = db.Query(where=db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)),
+                     order_by=db.OrderBy("v", descending=desc))
+        want = sorted(vals[(vals >= lo) & (vals <= hi)].tolist(),
+                      reverse=desc)
+        for n_shards in SHARD_COUNTS:
+            st = _sharded(ks, t, n_shards)
+            res = db.execute(ks, st, q)
+            assert vals[res.row_ids].tolist() == want, (desc, n_shards)
+            if n_shards > 1:
+                assert res.stats.merge_compares > 0
+
+
+def test_topk_invariant_with_ties(scheme_ks, rng):
+    """TopK with tie values straddling the cut: the returned value
+    multiset is identical for every shard count (tie ids may permute —
+    the FAE coin-flip contract)."""
+    ks = scheme_ks
+    ints = rng.integers(0, 12, 45)               # many ties at the cut
+    vals = _vals(ks, ints)
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(4))
+    q = db.Query(top_k=db.TopK("v", 6), select=("v",))
+    want = sorted(vals.tolist(), reverse=True)[:6]
+    for n_shards in SHARD_COUNTS:
+        st = _sharded(ks, t, n_shards)
+        res = db.execute(ks, st, q)
+        got = vals[res.row_ids].tolist()
+        assert got == want, (n_shards, got, want)
+        # projected ciphertexts decrypt to the same values
+        dec = np.asarray(E.decrypt(ks, res.columns["v"]))
+        if _is_ckks(ks):
+            from repro.core.ckks import equality_tolerance
+            np.testing.assert_allclose(dec, want,
+                                       atol=equality_tolerance(ks.params))
+        else:
+            np.testing.assert_array_equal(dec, want)
+
+
+def test_non_power_of_two_shard_count(scheme_ks, rng):
+    """S=3 (padded to 4 merge blocks with sentinel blocks) answers
+    exactly like S=1."""
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 100, 38))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(5))
+    lo = _bound(ks, _vals(ks, 10), -1)
+    hi = _bound(ks, _vals(ks, 80), +1)
+    q = db.Query(where=db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)),
+                 top_k=db.TopK("v", 4))
+    ref = db.execute(ks, t, q)
+    res = db.execute(ks, _sharded(ks, t, 3), q)
+    np.testing.assert_array_equal(res.mask, ref.mask)
+    assert vals[res.row_ids].tolist() == vals[ref.row_ids].tolist()
+
+
+# ---------------------------------------------------------------------------
+# ε-band lanes (ckks float semantics) through the sharded paths
+# ---------------------------------------------------------------------------
+
+def test_eps_band_lanes_sharded(scheme_ks, rng):
+    ks = scheme_ks
+    if not _is_ckks(ks):
+        pytest.skip("ε-band equality is a float-column (ckks) feature")
+    vals = _vals(ks, rng.integers(0, 50, 44))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(6))
+    target = vals[11]
+    q = db.Eq("v", _enc(ks, target, 0), eps=EPS_BAND)
+    want = np.abs(vals - target) <= EPS_BAND
+    for n_shards in SHARD_COUNTS:
+        st = _sharded(ks, t, n_shards)
+        res = db.execute(ks, st, q)
+        np.testing.assert_array_equal(res.mask, want)
+        idx = db.ShardedIndex.build(ks, st, "v")
+        res_i = db.execute(ks, st, q, indexes={"v": idx})
+        np.testing.assert_array_equal(res_i.mask, want)
+        assert res_i.stats.eval_calls == 0     # resolved via fan-out probes
+
+
+# ---------------------------------------------------------------------------
+# sharded index: fan-out probing
+# ---------------------------------------------------------------------------
+
+def test_sharded_index_matches_linear_and_single(scheme_ks, rng):
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 300, 61))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(7))
+    for n_shards in SHARD_COUNTS:
+        st = _sharded(ks, t, n_shards)
+        idx = db.ShardedIndex.build(ks, st, "v")
+        # every shard's slice is correctly sorted (id-stripped)
+        for s, ix in enumerate(idx.shards):
+            lo_g, hi_g = int(st.offsets[s]), int(st.offsets[s + 1])
+            chunk = vals[lo_g:hi_g]
+            np.testing.assert_array_equal(chunk[ix.perm], np.sort(chunk))
+        for i in range(2):
+            a, b = np.sort(rng.choice(vals, 2, replace=False))
+            lo, hi = _bound(ks, a, -1), _bound(ks, b, +1)
+            q = db.Range("v", _enc(ks, lo, 10 + i), _enc(ks, hi, 20 + i))
+            lin = db.execute(ks, st, q)
+            ind = db.execute(ks, st, q, indexes={"v": idx})
+            np.testing.assert_array_equal(lin.mask, ind.mask)
+            np.testing.assert_array_equal(ind.mask,
+                                          (vals >= lo) & (vals <= hi))
+            assert ind.stats.eval_calls == 0
+        # fan-out cost: ~2 lanes x log2(shard size) per shard
+        per_shard = int(np.ceil(np.log2(max(2, int(st.shard_rows.max())))))
+        assert idx.search_compares <= 2 * 2 * n_shards * (per_shard + 1) * 2
+
+
+def test_sharded_index_point_lookup_duplicates(scheme_ks):
+    ks = scheme_ks
+    vals = _vals(ks, np.asarray([7, 3, 7, 1, 9, 7, 3, 2, 8, 7, 0]))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(8))
+    st = _sharded(ks, t, 4)
+    idx = db.ShardedIndex.build(ks, st, "v")
+    res = db.execute(ks, st, db.Eq("v", _enc(ks, _vals(ks, 7), 0)),
+                     indexes={"v": idx})
+    assert sorted(res.row_ids.tolist()) == [0, 2, 5, 9]
+    miss = db.execute(ks, st, db.Eq("v", _enc(ks, _vals(ks, 4), 1)),
+                      indexes={"v": idx})
+    assert len(miss) == 0
+
+
+# ---------------------------------------------------------------------------
+# sharded query server
+# ---------------------------------------------------------------------------
+
+def test_sharded_server_one_launch_per_batch(scheme_ks, rng):
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 200, 57))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(9))
+    st = _sharded(ks, t, 4)
+    server = db.ShardedQueryServer(ks, st, batch=4)
+    truth = {}
+    for i in range(4):
+        a, b = sorted(rng.integers(0, 200, 2).tolist())
+        lo = _bound(ks, _vals(ks, a), -1)
+        hi = _bound(ks, _vals(ks, b), +1)
+        qid = server.submit(db.Range("v", _enc(ks, lo, 100 + i),
+                                     _enc(ks, hi, 200 + i)))
+        truth[qid] = (vals >= lo) & (vals <= hi)
+    results = server.run()
+    assert len(server.batch_log) == 1
+    # 4 queries x 4 shards: still ONE fused launch
+    assert server.batch_log[0].eval_calls == 1
+    assert server.batch_log[0].shards == 4
+    for qid, want in truth.items():
+        np.testing.assert_array_equal(results[qid].mask, want)
+
+
+def test_sharded_server_indexed_lanes_and_topk(scheme_ks, rng):
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 150, 48))
+    t = db.Table.from_arrays(ks, "t", {"v": vals}, jax.random.PRNGKey(10))
+    st = _sharded(ks, t, 2)
+    idx = db.ShardedIndex.build(ks, st, "v")
+    server = db.ShardedQueryServer(ks, st, indexes={"v": idx}, batch=2)
+    lo = _bound(ks, _vals(ks, 20), -1)
+    hi = _bound(ks, _vals(ks, 120), +1)
+    q1 = db.Query(where=db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)),
+                  top_k=db.TopK("v", 5))
+    q2 = db.Query(where=db.Eq("v", _enc(ks, vals[3], 2)))
+    id1, id2 = server.submit(q1), server.submit(q2)
+    results = server.run()
+    assert server.batch_log[0].eval_calls == 0   # all lanes via fan-out
+    m1 = (vals >= lo) & (vals <= hi)
+    np.testing.assert_array_equal(results[id1].mask, m1)
+    want_top = sorted(vals[m1].tolist(), reverse=True)[:5]
+    assert vals[results[id1].row_ids].tolist() == want_top
+    np.testing.assert_array_equal(results[id2].mask, vals == vals[3])
+
+
+# ---------------------------------------------------------------------------
+# cost model: the merge networks do what the README claims
+# ---------------------------------------------------------------------------
+
+def test_merge_overhead_is_k_s_scale(bfv_engine_ks, rng):
+    """Cross-shard top-k merge compares are O(kp·S·log kp) — independent
+    of the row count n."""
+    ks = bfv_engine_ks
+    for n_rows in (64, 256):
+        vals = rng.integers(0, 10_000, n_rows).astype(np.int64)
+        t = db.Table.from_arrays(ks, "t", {"v": vals},
+                                 jax.random.PRNGKey(n_rows))
+        st = _sharded(ks, t, 4)
+        q = db.Query(top_k=db.TopK("v", 4))
+        res = db.execute(ks, st, q)
+        want = sorted(vals.tolist(), reverse=True)[:4]
+        assert vals[res.row_ids].tolist() == want
+        kp, S = 4, 4
+        bound = (S - 1) * (kp + (kp // 2) * int(np.log2(kp)))
+        assert 0 < res.stats.merge_compares <= bound
+        # per-shard phase scales with n, merge does not
+        assert res.stats.per_shard_order_compares > res.stats.merge_compares
