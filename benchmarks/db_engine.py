@@ -27,6 +27,15 @@ Demonstrates the database-perspective payoff on the paper's hg38 dataset
                       distributed-execution contract, asserted here and
                       recorded in the JSON trajectory
 
+  * join pass      — equi-join on hg38-derived keys, nested-loop
+                      (tiled N_l x N_r pair grid, ONE launch layout) vs
+                      sort-merge (two SortedIndex runs + log-depth
+                      merge + adjacency): wall time AND compare lanes,
+                      with the measured nested/sort-merge compare ratio
+                      asserted > 1 and recorded in BENCH_db.json —
+                      plus the same join on 4-shard tables (the [S, S]
+                      pair grid), byte-identical pairs required
+
 Every pass lands in BENCH_db.json (machine-readable: wall-clock,
 rows/s, compare counts per pass) so the perf trajectory is tracked
 across PRs — benchmarks/common.write_json.
@@ -377,6 +386,102 @@ def run_sharded(profile: str = "test-bfv", mode: str = "paper",
     return summary
 
 
+def run_join(profile: str = "test-bfv", mode: str = "paper",
+             rows: int = 256, shards: int = 4, tag: str = "db.join") -> dict:
+    """Nested-loop vs sort-merge equi-join on hg38-derived key columns.
+
+    Keys are hg38 coordinates folded onto a small bucket domain so the
+    join selects a realistic many-to-many match set (~rows/8 distinct
+    keys).  The acceptance numbers: both strategies return identical
+    canonical pairs, sort-merge spends measurably fewer compare lanes
+    (`compare_ratio` = nested/sort-merge > 1, recorded in the JSON
+    trajectory), and the 4-shard [S, S] pair grid reproduces the
+    unsharded pairs byte for byte.
+    """
+    ks = _keys(profile, mode)
+    vals = load_dataset("hg38", scheme="bfv", t=ks.params.t).astype(np.int64)
+    n_l, n_r = rows, max(8, rows // 2)
+    buckets = max(8, rows // 8)
+    lk = vals[:n_l] % buckets
+    rk = vals[n_l:n_l + n_r] % buckets
+    lt = db.Table.from_arrays(ks, "hg38_l", {"k": lk},
+                              jax.random.PRNGKey(30))
+    rt = db.Table.from_arrays(ks, "hg38_r", {"k": rk},
+                              jax.random.PRNGKey(31))
+    want = np.argwhere(lk[:, None] == rk[None, :])
+    join = db.Join(None, None, on="k")
+
+    db.execute_join(ks, lt, rt, join, strategy="nested")   # warm the tiles
+    t_nest, res_n = _timed(
+        lambda: db.execute_join(ks, lt, rt, join, strategy="nested"), reps=2)
+    nested_ok = bool(np.array_equal(res_n.pairs, want))
+    emit(f"{tag}.nested", t_nest * 1e6,
+         f"rows={n_l}x{n_r};pairs={len(res_n)};"
+         f"compares={res_n.stats.join_compares};"
+         f"evals={res_n.stats.eval_calls};exact={nested_ok}")
+
+    t0 = time.perf_counter()
+    li = {"k": db.SortedIndex.build(ks, lt, "k")}
+    ri = {"k": db.SortedIndex.build(ks, rt, "k")}
+    build_s = time.perf_counter() - t0
+    db.execute_join(ks, lt, rt, join, left_indexes=li, right_indexes=ri)
+    t_sm, res_s = _timed(
+        lambda: db.execute_join(ks, lt, rt, join, left_indexes=li,
+                                right_indexes=ri), reps=2)
+    sm_ok = bool(np.array_equal(res_s.pairs, want))
+    ratio = res_n.stats.join_compares / max(1, res_s.stats.join_compares)
+    emit(f"{tag}.sort_merge", t_sm * 1e6,
+         f"compares={res_s.stats.join_compares};"
+         f"merge={res_s.stats.merge_compares};"
+         f"adjacency={res_s.stats.adjacency_compares};"
+         f"index_build_s={build_s:.3f};exact={sm_ok};"
+         f"compare_ratio={ratio:.1f};speedup={t_nest / t_sm:.1f}x")
+
+    # the acceptance criteria, enforced where they are produced: CI runs
+    # this pass, so a strategy regression fails loudly instead of just
+    # writing exact=false into the trajectory file
+    assert nested_ok, "nested-loop join pairs diverged from plaintext"
+    assert sm_ok, "sort-merge join pairs diverged from plaintext"
+    assert ratio > 1, (
+        f"sort-merge must spend fewer compare lanes than nested-loop "
+        f"(got ratio {ratio:.2f})")
+
+    summary = {
+        "rows_left": n_l, "rows_right": n_r, "pairs": len(res_n),
+        "nested": {"wall_s": round(t_nest, 3),
+                   "compares": res_n.stats.join_compares,
+                   "eval_calls": res_n.stats.eval_calls,
+                   "exact": nested_ok},
+        "sort_merge": {"wall_s": round(t_sm, 3),
+                       "compares": res_s.stats.join_compares,
+                       "merge_compares": res_s.stats.merge_compares,
+                       "adjacency_compares": res_s.stats.adjacency_compares,
+                       "index_build_s": round(build_s, 3),
+                       "exact": sm_ok},
+        "compare_ratio": round(ratio, 2),
+        "sort_merge_fewer_compares": bool(ratio > 1),
+    }
+    if shards:
+        sl = db.ShardedTable.from_table(ks, lt,
+                                        spec=db.ShardSpec.create(shards))
+        sr = db.ShardedTable.from_table(ks, rt,
+                                        spec=db.ShardSpec.create(shards))
+        db.execute_join(ks, sl, sr, join, strategy="nested")       # warm
+        t_sh, res_sh = _timed(
+            lambda: db.execute_join(ks, sl, sr, join, strategy="nested"),
+            reps=2)
+        sh_ok = bool(np.array_equal(res_sh.pairs, res_n.pairs))
+        assert sh_ok, (
+            f"sharded join pairs not byte-identical at S={shards}")
+        emit(f"{tag}.sharded_s{shards}", t_sh * 1e6,
+             f"grid={shards}x{shards};"
+             f"compares={res_sh.stats.join_compares};identical={sh_ok}")
+        summary["sharded"] = {"shards": shards, "wall_s": round(t_sh, 3),
+                              "compares": res_sh.stats.join_compares,
+                              "identical_pairs": sh_ok}
+    return summary
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="test-bfv")
@@ -389,6 +494,8 @@ if __name__ == "__main__":
                     help="shard counts for the sharded pass (empty = skip)")
     ap.add_argument("--topk", type=int, default=8,
                     help="k for the sharded filter+topk pass")
+    ap.add_argument("--join-rows", type=int, default=256,
+                    help="left rows for the join pass (0 = skip)")
     ap.add_argument("--json", default="BENCH_db.json",
                     help="machine-readable output path ('' = skip)")
     args = ap.parse_args()
@@ -399,6 +506,10 @@ if __name__ == "__main__":
         sharded_summary = run_sharded(profile=args.profile, mode=args.mode,
                                       rows=args.rows, k=args.topk,
                                       shards=tuple(args.shards))
+    join_summary = None
+    if args.join_rows:
+        join_summary = run_join(profile=args.profile, mode=args.mode,
+                                rows=args.join_rows)
     if args.ckks_rows:
         run_ckks(rows=args.ckks_rows, queries=max(2, args.queries // 2))
     if args.json:
@@ -407,4 +518,5 @@ if __name__ == "__main__":
                          "mode": args.mode, "rows_arg": args.rows,
                          "backend": jax.default_backend(),
                          "devices": jax.device_count()},
-                   extra={"sharded": sharded_summary})
+                   extra={"sharded": sharded_summary,
+                          "join": join_summary})

@@ -15,6 +15,8 @@ Deterministic (seeded) so benchmark numbers are reproducible.
 """
 from __future__ import annotations
 
+import zlib
+
 import numpy as np
 
 ROW_COUNTS = {"bitcoin": 1085, "covid19": 340, "hg38": 34423}
@@ -52,7 +54,10 @@ def _hg38(rng: np.random.Generator) -> np.ndarray:
 
 def load_dataset(name: str, *, scheme: str = "bfv",
                  t: int = 65537, seed: int = 1234) -> np.ndarray:
-    rng = np.random.default_rng(seed + hash(name) % 1000)
+    # crc32, NOT hash(): str hashes are randomized per process
+    # (PYTHONHASHSEED), which would make every "deterministic" dataset —
+    # and the whole BENCH_db.json trajectory — differ run to run
+    rng = np.random.default_rng(seed + zlib.crc32(name.encode()) % 1000)
     raw = {"bitcoin": _bitcoin, "covid19": _covid19, "hg38": _hg38}[name](rng)
     if scheme == "bfv":
         return (raw.astype(np.int64) % t).astype(np.int64)

@@ -8,7 +8,9 @@ plan stage into one batched Eval, and a batched multi-query server.
     Table        — named Ciphertext columns, rows padded to powers of two
     SortedIndex  — built once via encrypted_sort; binary-search lookups
     Range/Eq/And/Or/Not + OrderBy/TopK/Limit/Query — the plan IR
+    Join         — two-table equi-join node (ε-band capable)
     compile_plan / execute — lower + run a plan (indexes optional)
+    execute_join — batched nested-loop or sort-merge join execution
     QueryServer  — K client queries against one table in one fused pass
 
 Sharded variants (repro.db.shard): ShardSpec / ShardedTable /
@@ -36,11 +38,18 @@ from repro.db.executor import (  # noqa: F401
     fused_eval,
 )
 from repro.db.index import SortedIndex  # noqa: F401
+from repro.db.join import (  # noqa: F401
+    JoinResult,
+    JoinStats,
+    execute_join,
+)
 from repro.db.plan import (  # noqa: F401
     And,
     Atom,
+    CompiledJoin,
     CompiledPlan,
     Eq,
+    Join,
     Limit,
     Not,
     Or,
@@ -48,6 +57,7 @@ from repro.db.plan import (  # noqa: F401
     Query,
     Range,
     TopK,
+    compile_join,
     compile_plan,
 )
 from repro.db.table import Table  # noqa: F401
@@ -55,7 +65,7 @@ from repro.db.table import Table  # noqa: F401
 
 _SHARD_EXPORTS = ("ShardSpec", "ShardedTable", "ShardedIndex",
                   "ShardedQueryServer", "ShardedExecStats",
-                  "execute_sharded")
+                  "execute_sharded", "execute_join_sharded")
 
 
 def __getattr__(name):

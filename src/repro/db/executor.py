@@ -20,6 +20,12 @@ Execution model (one XLA program per stage):
      arbitrary match count).
   4. LIMIT + PROJECT.  Slice row ids; gather selected ciphertext columns.
 
+Two-table plans (`plan.Join`) execute in `db/join.py`, which reuses
+this module's stage helpers for the per-side filters and adds the
+pair-matching strategies (tiled nested-loop grid / sort-merge) on top —
+`fused_eval`'s raw-value + host-side-threshold contract is exactly what
+lets the join grid share programs across ε's and queries.
+
 Engines: "jnp" evaluates via core/compare (reference path, CPU),
 "kernel" routes the fused stage through kernels/ops.compare (Pallas
 `cmp_eval`, compiled on TPU), "auto" picks kernel iff on TPU.
@@ -54,11 +60,14 @@ class ExecStats:
 
     @property
     def filter_compares(self) -> int:
+        """Total filter-stage compare lanes (fused scans + index probes)."""
         return self.scan_compares + self.index_compares
 
 
 @dataclasses.dataclass
 class QueryResult:
+    """One executed plan's answer: matched/ordered row ids, the filter
+    mask, still-encrypted projected columns, and the engine stats."""
     row_ids: np.ndarray                      # selected (ordered) row ids
     mask: np.ndarray                         # [n_rows] filter mask
     columns: Dict[str, Ciphertext]           # projected ciphertexts

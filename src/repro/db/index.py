@@ -82,6 +82,13 @@ class SortedIndex:
         return cls(column, sorted_ct, np.asarray(perm),
                    build_compares=C.bitonic_compare_count(table.n_rows))
 
+    def sorted_run(self) -> tuple:
+        """The index as an ascending (ciphertext run, row-id array) pair —
+        the sort-merge join consumes this directly, so a join between two
+        indexed columns pays ZERO extra sort compares (the build is
+        already amortized across lookups)."""
+        return self.sorted_ct, self.perm
+
     # -- search ------------------------------------------------------------
 
     def _eval(self, ks: KeySet) -> Callable:
@@ -166,6 +173,7 @@ class SortedIndex:
 
     def mask_eq(self, ks: KeySet, ct_value: Ciphertext, n_padded: int, *,
                 eps: Optional[float] = None) -> np.ndarray:
+        """point_lookup as a [n_padded] bool row mask (executor plumbing)."""
         return rows_to_mask(self.point_lookup(ks, ct_value, eps=eps),
                             n_padded)
 

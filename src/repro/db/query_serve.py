@@ -13,7 +13,13 @@ against one table in a single vectorized pass —
   * float (CKKS) lanes ride the same launches: each lane carries its
     predicate's decode threshold (ε-band Eq, ε-inclusive Range bounds),
     and scan atoms threshold the shared raw-eval launch per atom — a
-    batch mixing exact BFV-style and ε-tolerant predicates still fuses.
+    batch mixing exact BFV-style and ε-tolerant predicates still fuses;
+  * JOINS batch too (`submit_join`): a join's left-side filter leaves
+    bind into the SAME shared scan/index launches as plain queries (the
+    leaf partition is agnostic to which plan kind owns a leaf), and
+    nested-loop pair grids dedupe across the batch — K joins against
+    the same right table and key columns share ONE tiled raw-eval grid,
+    each join applying its own τ/ε and masks host-side.
 
 Per-query combine / order / limit stages then run on each query's own
 mask (they depend on per-query match sets, so they cannot share a
@@ -37,6 +43,7 @@ import numpy as np
 from repro.core.ckks import eps_to_tau
 from repro.core.keys import KeySet
 from repro.db import executor as X
+from repro.db import join as J
 from repro.db import plan as P
 from repro.db.index import SortedIndex, _stack_cts
 from repro.db.table import Table, rows_to_mask
@@ -44,11 +51,26 @@ from repro.db.table import Table, rows_to_mask
 
 @dataclasses.dataclass
 class BatchStats:
+    """Shared-launch accounting for one drained batch (the fused Eval,
+    the lane-batched searches and the deduped join grids are counted
+    ONCE here; per-query shares live on each result's own stats)."""
     queries: int = 0
+    joins: int = 0
     eval_calls: int = 0
     scan_compares: int = 0
     index_compares: int = 0
+    grid_evals: int = 0            # deduped nested-join pair-grid launches
+    pair_compares: int = 0         # deduped pair-grid lanes
     wall_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _QueuedJoin:
+    """A submitted join: the plan plus its right-hand table context."""
+    join: P.Join
+    right: Table
+    right_indexes: Dict[str, SortedIndex]
+    strategy: str
 
 
 class QueryServer:
@@ -77,8 +99,31 @@ class QueryServer:
         self._queue.append((qid, query))
         return qid
 
+    def submit_join(self, join: P.Join, right: Table, *,
+                    right_indexes: Optional[Dict[str, SortedIndex]] = None,
+                    strategy: str = "auto") -> int:
+        """Enqueue a Join of the server's table (left side) against
+        `right`; returns a request id resolving to a `JoinResult`.
+
+        The join's LEFT filter leaves fuse into the batch's shared
+        scan/index launches exactly like plain queries' leaves; its
+        nested-loop pair grid dedupes with every other queued join that
+        names the same `right` table and key columns — K such joins cost
+        ONE tiled grid launch.  `right_indexes` serve the right-side
+        filters and (with a left index on the server) enable the
+        sort-merge strategy.
+        """
+        P.compile_join(join)          # validate kind/on shape at submit time
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedJoin(join, right,
+                                             dict(right_indexes or {}),
+                                             strategy)))
+        return qid
+
     def run(self) -> Dict[int, X.QueryResult]:
-        """Drain the queue in batches; returns {request id: result}."""
+        """Drain the queue in batches; returns {request id: result}
+        (a `QueryResult` per query, a `JoinResult` per join)."""
         results: Dict[int, X.QueryResult] = {}
         while self._queue:
             chunk, self._queue = (self._queue[:self.batch],
@@ -88,15 +133,34 @@ class QueryServer:
 
     # -- batch execution ---------------------------------------------------
 
-    def _run_batch(self, chunk: List[Tuple[int, P.Query]],
+    def _run_batch(self, chunk: List[Tuple[int, object]],
                    ) -> Dict[int, X.QueryResult]:
         t0 = time.perf_counter()
         ks, table = self.ks, self.table
         N = table.n_padded
-        plans = [(qid, P.compile_plan(q)) for qid, q in chunk]
-        bstats = BatchStats(queries=len(chunk))
+        queries: List[Tuple[int, P.CompiledPlan]] = []
+        joins: List[Tuple[int, P.CompiledJoin, _QueuedJoin]] = []
+        for qid, item in chunk:
+            if isinstance(item, _QueuedJoin):
+                joins.append((qid, P.compile_join(item.join), item))
+            else:
+                queries.append((qid, P.compile_plan(item)))
+        bstats = BatchStats(queries=len(queries), joins=len(joins))
 
-        # partition every query's leaves into index lanes vs scan atoms
+        # slots: every left-table plan whose leaves ride the shared
+        # launches — plain queries first, then joins' left sub-plans (the
+        # leaf partition below is agnostic to which kind owns a leaf)
+        plans: List[Tuple[Optional[int], P.CompiledPlan]] = [
+            (qid, plan) for qid, plan in queries]
+        join_slot: List[Optional[int]] = []
+        for _, cj, _ in joins:
+            if cj.left_plan is not None:
+                join_slot.append(len(plans))
+                plans.append((None, cj.left_plan))
+            else:
+                join_slot.append(None)
+
+        # partition every slot's leaves into index lanes vs scan atoms
         scan_atoms: List[P.Atom] = []
         scan_ref: List[Tuple[int, int, int, int]] = []  # (plan#, leaf, start, count)
         lane_cts: Dict[str, list] = {}                   # column -> [ct, ...]
@@ -157,9 +221,12 @@ class QueryServer:
                 qstats[pi].scan_compares += count * N
                 qstats[pi].eval_calls = 1     # its share of the fused launch
 
-        # per-query combine + order/limit/project
+        # per-query combine + order/limit/project (join slots skip — their
+        # masks resolve inside the join section below)
         results: Dict[int, X.QueryResult] = {}
         for pi, (qid, plan) in enumerate(plans):
+            if qid is None:
+                continue
             stats = qstats[pi]
             mask = X.combine_tree(plan.tree, leaf_masks[pi], N)
             mask &= table.valid
@@ -170,9 +237,87 @@ class QueryServer:
             results[qid] = X.QueryResult(
                 row_ids=row_ids, mask=mask[:table.n_rows],
                 columns=columns, stats=stats)
+
+        if joins:
+            results.update(self._run_joins(joins, join_slot, leaf_masks,
+                                           qstats, bstats))
         bstats.wall_s = time.perf_counter() - t0
         self.batch_log.append(bstats)
         return results
+
+    def _run_joins(self, joins, join_slot, leaf_masks, qstats,
+                   bstats: BatchStats) -> Dict[int, J.JoinResult]:
+        """Resolve the batch's joins after the shared leaf launches.
+
+        Nested-loop pair grids dedupe by (right table, key columns):
+        each distinct triple costs ONE tiled raw-eval grid for the whole
+        batch, every join decoding it under its own τ/ε and masks.
+        Sort-merge runs come from per-side indexes when provided; runs
+        built on the fly are memoized per (table, column) within the
+        batch, so K sort-merge joins never pay K O(n log² n) sorts.
+        """
+        ks, table = self.ks, self.table
+        grids: Dict[Tuple[int, str, str], np.ndarray] = {}
+        run_cache: Dict[Tuple[int, str], tuple] = {}
+        out: Dict[int, J.JoinResult] = {}
+
+        def side_run(side_table, col, index, jstats):
+            key = (id(side_table), col)
+            if index is not None:
+                return index.sorted_run()
+            if key not in run_cache:
+                run_cache[key] = J._sorted_run(ks, side_table, col, None,
+                                               jstats)
+            return run_cache[key]
+        for (qid, cj, item), slot in zip(joins, join_slot):
+            lcol, rcol = cj.on_columns
+            right = item.right
+            jstats = J.JoinStats()
+            jstats.strategy = J.resolve_strategy(
+                item.strategy, lcol in self.indexes,
+                rcol in item.right_indexes)
+            lmask = J._side_mask(
+                ks, table, cj.left_plan, indexes=self.indexes,
+                engine=self.engine, stats=jstats.left,
+                leaf_masks=None if slot is None else leaf_masks[slot])
+            if slot is not None:      # its leaves rode the shared launches
+                jstats.left.scan_leaves += qstats[slot].scan_leaves
+                jstats.left.indexed_leaves += qstats[slot].indexed_leaves
+                jstats.left.scan_compares += qstats[slot].scan_compares
+                jstats.left.index_compares += qstats[slot].index_compares
+            rmask = J._side_mask(ks, right, cj.right_plan,
+                                 indexes=item.right_indexes,
+                                 engine=self.engine, stats=jstats.right)
+            tau = J.join_tau(ks, item.join)
+            if jstats.strategy == "nested":
+                key = (id(right), lcol, rcol)
+                if key not in grids:
+                    scratch = J.JoinStats()
+                    grids[key] = J.pair_eval_values(
+                        ks, table.column(lcol), right.column(rcol),
+                        engine=self.engine, stats=scratch)
+                    bstats.grid_evals += scratch.eval_calls
+                    bstats.pair_compares += scratch.pair_compares
+                jstats.pair_compares += table.n_padded * right.n_padded
+                jstats.eval_calls = 1      # its share of the deduped grid
+                pairs = J.pairs_from_grid(grids[key], tau, lmask, rmask)
+            else:
+                lrun = side_run(table, lcol, self.indexes.get(lcol), jstats)
+                rrun_ct, rrun_ids = side_run(
+                    right, rcol, item.right_indexes.get(rcol), jstats)
+                pairs = J.merge_runs_to_pairs(
+                    ks, [lrun, (rrun_ct, rrun_ids + table.n_padded)],
+                    table.n_padded, tau,
+                    verify=J.needs_verify(ks, item.join),
+                    gather_left=lambda rows: table.gather(lcol, rows),
+                    gather_right=lambda rows, r=right: r.gather(rcol, rows),
+                    left_mask=lmask, right_mask=rmask, stats=jstats)
+            columns = J._project(cj, table.gather, right.gather, pairs)
+            out[qid] = J.JoinResult(
+                pairs=pairs, left_mask=lmask[:table.n_rows],
+                right_mask=rmask[:right.n_rows], columns=columns,
+                stats=jstats)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -180,6 +325,8 @@ class QueryServer:
 # ---------------------------------------------------------------------------
 
 def main(argv=None) -> dict:
+    """CLI demo: serve random encrypted range queries over a paper
+    dataset in batches (see the module docstring for usage)."""
     import jax.numpy as jnp
 
     from repro.core import encrypt as E

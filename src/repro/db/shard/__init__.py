@@ -13,6 +13,8 @@ of the shard count and the placement.
     ShardedIndex       — per-shard SortedIndexes, fan-out binary search
     execute_sharded    — the sharded plan executor (db.execute dispatches
                          here automatically for ShardedTable arguments)
+    execute_join_sharded — cross-shard joins on the [S_l, S_r] pair grid
+                         (db.execute_join dispatches here automatically)
     ShardedQueryServer — K queries x S shards in one vectorized pass
 """
 from repro.db.shard.executor import (  # noqa: F401
@@ -21,6 +23,10 @@ from repro.db.shard.executor import (  # noqa: F401
     sharded_fused_eval,
 )
 from repro.db.shard.index import ShardedIndex  # noqa: F401
+from repro.db.shard.join import (  # noqa: F401
+    execute_join_sharded,
+    sharded_pair_eval,
+)
 from repro.db.shard.serve import (  # noqa: F401
     ShardedBatchStats,
     ShardedQueryServer,

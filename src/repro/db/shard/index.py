@@ -93,6 +93,7 @@ class ShardedIndex:
 
     @property
     def num_shards(self) -> int:
+        """Number of per-shard SortedIndexes (= the table's shard count)."""
         return len(self.shards)
 
     def _eval(self, ks: KeySet) -> Callable:
@@ -157,6 +158,8 @@ class ShardedIndex:
     def shard_masks_range(self, ks: KeySet, ct_lo: Ciphertext,
                           ct_hi: Ciphertext, n_padded: int, *,
                           eps: Optional[float] = None) -> List[np.ndarray]:
+        """lo <= value <= hi as per-shard local row masks — one 2-lane
+        fan-out search (`eps` makes the bounds ε-inclusive)."""
         bounds = _stack_cts([ct_lo, ct_hi])
         pos = self.search(ks, bounds, np.array([False, True]),
                           self._eps_taus(ks, eps))
@@ -165,6 +168,8 @@ class ShardedIndex:
     def shard_masks_eq(self, ks: KeySet, ct_value: Ciphertext,
                        n_padded: int, *,
                        eps: Optional[float] = None) -> List[np.ndarray]:
+        """value == v (ε-band with `eps`) as per-shard local row masks —
+        one 2-lane fan-out search."""
         bounds = _stack_cts([ct_value, ct_value])
         pos = self.search(ks, bounds, np.array([False, True]),
                           self._eps_taus(ks, eps))

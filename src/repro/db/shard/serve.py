@@ -37,6 +37,9 @@ from repro.db.shard.table import ShardedTable
 
 @dataclasses.dataclass
 class ShardedBatchStats:
+    """Shared-launch accounting for one drained batch across all shards
+    (the fused shard-parallel Eval and the fan-out searches count ONCE
+    here; per-query shares live on each result's own stats)."""
     queries: int = 0
     shards: int = 0
     eval_calls: int = 0
@@ -65,6 +68,7 @@ class ShardedQueryServer:
     # -- queue -------------------------------------------------------------
 
     def submit(self, query) -> int:
+        """Enqueue a Query (or bare predicate); returns a request id."""
         if isinstance(query, P.Predicate):
             query = P.Query(where=query)
         qid = self._next_id
@@ -73,6 +77,7 @@ class ShardedQueryServer:
         return qid
 
     def run(self) -> Dict[int, X.QueryResult]:
+        """Drain the queue in batches; returns {request id: result}."""
         results: Dict[int, X.QueryResult] = {}
         while self._queue:
             chunk, self._queue = (self._queue[:self.batch],

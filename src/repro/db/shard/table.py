@@ -128,18 +128,22 @@ class ShardedTable:
 
     @property
     def num_shards(self) -> int:
+        """Logical shard count S (the stacks' leading dim)."""
         return int(self.spec.num_shards)
 
     @property
     def n_rows(self) -> int:
+        """Total valid rows across all shards (global id space size)."""
         return int(self.offsets[-1])
 
     @property
     def n_padded_per_shard(self) -> int:
+        """The common power-of-two per-shard block size N_sp."""
         return next(iter(self.columns.values())).c0.shape[1]
 
     @property
     def column_names(self) -> tuple:
+        """Names of the encrypted columns."""
         return tuple(self.columns)
 
     def shard_valid(self, s: int) -> np.ndarray:
@@ -147,6 +151,7 @@ class ShardedTable:
         return np.arange(self.n_padded_per_shard) < int(self.shard_rows[s])
 
     def ciphertext_bytes(self) -> int:
+        """Storage footprint of all encrypted column stacks."""
         return sum(ct.c0.nbytes + ct.c1.nbytes
                    for ct in self.columns.values())
 

@@ -124,6 +124,7 @@ class Table:
 
     @property
     def n_padded(self) -> int:
+        """Power-of-two padded row count (every column's leading dim)."""
         return next(iter(self.columns.values())).c0.shape[0]
 
     @property
@@ -133,6 +134,7 @@ class Table:
 
     @property
     def column_names(self) -> tuple:
+        """Names of the encrypted columns."""
         return tuple(self.columns)
 
     def ciphertext_bytes(self) -> int:
@@ -142,6 +144,7 @@ class Table:
     # -- access ------------------------------------------------------------
 
     def column(self, name: str) -> Ciphertext:
+        """The named column's stacked ciphertext rows."""
         return self.columns[name]
 
     def gather(self, name: str, rows: Iterable[int]) -> Ciphertext:

@@ -98,6 +98,33 @@ def compare(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
                      0, jnp.sign(v)).astype(jnp.int32)
 
 
+def broadcast_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
+                          block_b: int = NK.DEFAULT_BLOCK_B,
+                          interpret: bool | None = None) -> jax.Array:
+    """Kernel-backed raw eval values over two-sided-broadcast batch dims.
+
+    ct0 and ct1 carry mutually-broadcastable batch shapes — e.g. the
+    join tile layout ct0 [T, 1, K, n] against ct1 [1, R, K, n], or a
+    shard_map body's local [S_r, 1, N_r] bounds against [1, N_l, 1]
+    rows.  The broadcast grid is materialized once, flattened through
+    the fused `cmp_eval` kernel path exactly like the single-dim entry,
+    and reshaped back — ONE kernel launch with the same block padding
+    rules as a fused filter scan.  THE shared broadcast-flatten-eval
+    implementation: `db.join`'s tiled grids and `shard_eval_values`'
+    per-device body both route here rather than re-deriving the
+    reshape.  (Distinct from `db.join.pair_eval_values`, which adds
+    host-side tiling on top of launches like this one.)
+    """
+    batch = jnp.broadcast_shapes(ct0.c0.shape[:-2], ct1.c0.shape[:-2])
+    full = batch + ct0.c0.shape[-2:]
+    flat = lambda x: jnp.broadcast_to(x, full).reshape(  # noqa: E731
+        (-1,) + full[-2:])
+    v = eval_values(ks, Ciphertext(flat(ct0.c0), flat(ct0.c1)),
+                    Ciphertext(flat(ct1.c0), flat(ct1.c1)),
+                    block_b=block_b, interpret=interpret)
+    return v.reshape(batch)
+
+
 # ---------------------------------------------------------------------------
 # shard-aware eval entry (repro.db.shard)
 # ---------------------------------------------------------------------------
@@ -128,13 +155,17 @@ def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
 
     ct0 leads with the shard dim — [S, ...batch, K, n], S divisible by
     the mesh's `axis_name` size; ct1 is replicated to every device and
-    broadcast against ct0's batch dims inside each shard (the trapdoor
-    bounds of a fused filter stage).  HADES eval is row-local, so the
-    mapped program needs NO cross-shard collectives — each device runs
-    the eval pipeline over its own rows and only the decoded masks are
-    reduced host-side.  `use_kernel=True` routes the per-device compute
-    through the Pallas `cmp_eval` path (flattening local batch dims the
-    way the single-device kernel entry does).
+    broadcast against ct0's batch dims inside each shard.  The two
+    batch shapes broadcast TWO-SIDED, which covers both launch layouts
+    the sharded engine uses: the fused filter stage (ct0 [S, A, N_sp],
+    ct1 [A, 1] trapdoor bounds) and the cross-shard join pair grid
+    (ct0 [S_l, 1, N_l, 1], ct1 [S_r, 1, N_r] — every device evaluates
+    its left blocks against ALL right shard blocks).  HADES eval is
+    row-local, so the mapped program needs NO cross-shard collectives —
+    each device runs the eval pipeline over its own rows and only the
+    decoded masks are reduced host-side.  `use_kernel=True` routes the
+    per-device compute through the Pallas `cmp_eval` path (flattening
+    local batch dims the way the single-device kernel entry does).
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     from repro.core import compare as C
@@ -143,14 +174,9 @@ def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
         if not use_kernel:
             return C.eval_value(ks, Ciphertext(c00, c01),
                                 Ciphertext(b0, b1))
-        batch = c00.shape[:-2]
-        b0b = jnp.broadcast_to(b0, c00.shape)
-        b1b = jnp.broadcast_to(b1, c01.shape)
-        flat = lambda x: x.reshape((-1,) + x.shape[-2:])  # noqa: E731
-        v = eval_values(ks, Ciphertext(flat(c00), flat(c01)),
-                        Ciphertext(flat(b0b), flat(b1b)),
-                        block_b=block_b, interpret=interpret)
-        return v.reshape(batch)
+        return broadcast_eval_values(ks, Ciphertext(c00, c01),
+                                     Ciphertext(b0, b1),
+                                     block_b=block_b, interpret=interpret)
 
     from jax.sharding import PartitionSpec as P
     nd0, nd1 = ct0.c0.ndim, ct1.c0.ndim

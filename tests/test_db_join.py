@@ -1,0 +1,371 @@
+"""repro.db joins: plan node, nested-loop vs sort-merge, shard grid.
+
+THE contracts under test:
+
+  * EQUIVALENCE — both strategies return the same canonical `pairs`
+    array as the plaintext reference, on both schemes (ckks data lives
+    on the usual coarse GRID so every decision has noise-proof margins).
+  * COST — sort-merge issues measurably fewer compare lanes than the
+    nested-loop pair grid once tables are non-trivial.
+  * SHARD INVARIANCE — `from_table`-sharded joins are byte-identical to
+    the unsharded plan for S ∈ {1, 2, 3, 4}, nested AND sort-merge
+    (nested re-evaluates the SAME ciphertext pairs, so even the raw
+    grid values must agree).
+  * ε-BAND — float keys within ε join, keys beyond ε don't, and the
+    sort-merge candidate verification restores non-transitive band
+    semantics (adjacency chaining alone would overclaim).
+
+Edge cases from the issue checklist ride along: empty results,
+duplicate keys on both sides, non-power-of-two tables, batched K-join
+serving.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import db
+from repro.core import encrypt as E
+
+GRID = 0.25        # ckks float grid (>> test-ckks equality tolerance)
+EPS_BAND = 0.3     # captures exactly the ±1-grid-step neighbors
+SHARD_COUNTS = (1, 2, 3, 4)
+
+
+def _is_ckks(ks) -> bool:
+    return ks.params.profile.scheme == "ckks"
+
+
+def _vals(ks, ints) -> np.ndarray:
+    ints = np.asarray(ints)
+    if _is_ckks(ks):
+        return ints.astype(np.float64) * GRID
+    return ints.astype(np.int64)
+
+
+def _enc(ks, v, seed):
+    v = float(v) if _is_ckks(ks) else int(v)
+    return E.encrypt(ks, jnp.asarray(v), jax.random.PRNGKey(seed))
+
+
+def _bound(ks, v, side):
+    return float(v) + side * GRID / 2 if _is_ckks(ks) else int(v)
+
+
+def _tables(ks, rng, n_l=21, n_r=13, key_lo=0, key_hi=9):
+    """Two tables with overlapping duplicate-heavy keys (non-pow2 rows)."""
+    lk = _vals(ks, rng.integers(key_lo, key_hi, n_l))
+    rk = _vals(ks, rng.integers(key_lo, key_hi, n_r))
+    lv = _vals(ks, rng.integers(0, 200, n_l))
+    rw = _vals(ks, rng.integers(0, 200, n_r))
+    lt = db.Table.from_arrays(ks, "L", {"k": lk, "v": lv},
+                              jax.random.PRNGKey(1))
+    rt = db.Table.from_arrays(ks, "R", {"k": rk, "w": rw},
+                              jax.random.PRNGKey(2))
+    return lt, rt, lk, rk, lv, rw
+
+
+def _want_pairs(lk, rk, lmask=None, rmask=None, eps=None):
+    """Plaintext reference pairs in the canonical lexicographic order."""
+    if eps is None:
+        grid = lk[:, None] == rk[None, :]
+    else:
+        grid = np.abs(lk[:, None] - rk[None, :]) <= eps
+    if lmask is not None:
+        grid &= np.asarray(lmask)[:, None]
+    if rmask is not None:
+        grid &= np.asarray(rmask)[None, :]
+    return np.argwhere(grid)
+
+
+def _indexes(ks, lt, rt):
+    return ({"k": db.SortedIndex.build(ks, lt, "k")},
+            {"k": db.SortedIndex.build(ks, rt, "k")})
+
+
+# ---------------------------------------------------------------------------
+# plan node / compilation
+# ---------------------------------------------------------------------------
+
+def test_join_node_compiles_and_validates(bfv_engine_ks):
+    ks = bfv_engine_ks
+    j = db.Join(db.Eq("v", _enc(ks, 5, 0)), None, on="k")
+    cj = db.compile_join(j)
+    assert cj.on_columns == ("k", "k")
+    assert cj.left_plan is not None and cj.right_plan is None
+    assert db.Join(None, None, on=("a", "b")).on_columns == ("a", "b")
+    with pytest.raises(ValueError, match="kind"):
+        db.compile_join(db.Join(None, None, on="k", kind="theta"))
+    with pytest.raises(TypeError):
+        db.compile_join(db.Join("not a plan", None, on="k"))
+
+
+def test_join_strategy_resolution():
+    from repro.db.join import resolve_strategy
+    assert resolve_strategy("auto", True, True) == "sort_merge"
+    assert resolve_strategy("auto", True, False) == "nested"
+    assert resolve_strategy("nested", True, True) == "nested"
+    with pytest.raises(ValueError):
+        resolve_strategy("hash", True, True)
+
+
+# ---------------------------------------------------------------------------
+# nested-loop vs sort-merge equivalence (cross-scheme)
+# ---------------------------------------------------------------------------
+
+def test_join_matches_plaintext_both_strategies(scheme_ks, rng):
+    """Duplicate keys on BOTH sides: every cross pair appears exactly
+    once, canonical order, identical across strategies."""
+    ks = scheme_ks
+    lt, rt, lk, rk, _, _ = _tables(ks, rng)
+    want = _want_pairs(lk, rk)
+    assert len(want)                       # keys overlap by construction
+    j = db.Join(None, None, on="k")
+    res_n = db.execute_join(ks, lt, rt, j, strategy="nested")
+    li, ri = _indexes(ks, lt, rt)
+    res_s = db.execute_join(ks, lt, rt, j, left_indexes=li,
+                            right_indexes=ri)
+    assert res_s.stats.strategy == "sort_merge"       # auto picked it
+    np.testing.assert_array_equal(res_n.pairs, want)
+    np.testing.assert_array_equal(res_s.pairs, want)
+    # the whole nested grid rode tiled batched Evals over padded rows
+    assert res_n.stats.pair_compares == lt.n_padded * rt.n_padded
+    assert res_n.stats.eval_calls >= 1
+
+
+def test_sort_merge_uses_fewer_compares(scheme_ks, rng):
+    """The cost claim: sort-merge's merge+adjacency+verify lanes stay
+    well under the nested-loop pair grid (the strategy's reason to
+    exist, asserted where it is produced)."""
+    ks = scheme_ks
+    lt, rt, _, _, _, _ = _tables(ks, rng, n_l=48, n_r=48, key_hi=30)
+    j = db.Join(None, None, on="k")
+    res_n = db.execute_join(ks, lt, rt, j, strategy="nested")
+    li, ri = _indexes(ks, lt, rt)
+    res_s = db.execute_join(ks, lt, rt, j, left_indexes=li,
+                            right_indexes=ri)
+    np.testing.assert_array_equal(res_s.pairs, res_n.pairs)
+    assert res_s.stats.build_compares == 0        # runs reused from indexes
+    assert res_s.stats.join_compares < res_n.stats.join_compares / 2
+
+
+def test_join_empty_result(scheme_ks, rng):
+    """Disjoint key ranges -> zero pairs on every path."""
+    ks = scheme_ks
+    lk = _vals(ks, rng.integers(0, 10, 12))
+    rk = _vals(ks, rng.integers(100, 110, 9))
+    lt = db.Table.from_arrays(ks, "L", {"k": lk}, jax.random.PRNGKey(3))
+    rt = db.Table.from_arrays(ks, "R", {"k": rk}, jax.random.PRNGKey(4))
+    j = db.Join(None, None, on="k")
+    li, ri = _indexes(ks, lt, rt)
+    for res in (db.execute_join(ks, lt, rt, j, strategy="nested"),
+                db.execute_join(ks, lt, rt, j, left_indexes=li,
+                                right_indexes=ri)):
+        assert len(res) == 0
+        assert res.pairs.shape == (0, 2)
+
+
+def test_join_with_side_filters_and_projection(scheme_ks, rng):
+    """Per-side sub-plans filter before the join; `select` columns come
+    back as still-encrypted "left./right." projections at pair rows."""
+    ks = scheme_ks
+    lt, rt, lk, rk, lv, rw = _tables(ks, rng, n_l=26, n_r=17)
+    lo = _bound(ks, _vals(ks, 40), -1)
+    hi = _bound(ks, _vals(ks, 160), +1)
+    j = db.Join(
+        db.Query(where=db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)),
+                 select=("v",)),
+        db.Query(select=("w",)),
+        on="k")
+    lmask = (lv >= lo) & (lv <= hi)
+    want = _want_pairs(lk, rk, lmask=lmask)
+    li, ri = _indexes(ks, lt, rt)
+    for res in (db.execute_join(ks, lt, rt, j, strategy="nested"),
+                db.execute_join(ks, lt, rt, j, left_indexes=li,
+                                right_indexes=ri)):
+        np.testing.assert_array_equal(res.pairs, want)
+        np.testing.assert_array_equal(res.left_mask, lmask)
+        got_v = np.asarray(E.decrypt(ks, res.columns["left.v"]))
+        got_w = np.asarray(E.decrypt(ks, res.columns["right.w"]))
+        if _is_ckks(ks):
+            from repro.core.ckks import equality_tolerance
+            tol = equality_tolerance(ks.params)
+            np.testing.assert_allclose(got_v, lv[want[:, 0]], atol=tol)
+            np.testing.assert_allclose(got_w, rw[want[:, 1]], atol=tol)
+        else:
+            np.testing.assert_array_equal(got_v, lv[want[:, 0]])
+            np.testing.assert_array_equal(got_w, rw[want[:, 1]])
+
+
+def test_join_on_distinct_column_names(scheme_ks, rng):
+    ks = scheme_ks
+    a = _vals(ks, rng.integers(0, 8, 11))
+    b = _vals(ks, rng.integers(0, 8, 7))
+    lt = db.Table.from_arrays(ks, "L", {"ka": a}, jax.random.PRNGKey(5))
+    rt = db.Table.from_arrays(ks, "R", {"kb": b}, jax.random.PRNGKey(6))
+    res = db.execute_join(ks, lt, rt, db.Join(None, None, on=("ka", "kb")),
+                          strategy="nested")
+    np.testing.assert_array_equal(res.pairs, _want_pairs(a, b))
+
+
+# ---------------------------------------------------------------------------
+# ε-band joins (ckks float keys)
+# ---------------------------------------------------------------------------
+
+def test_eps_band_join_both_strategies(scheme_ks, rng):
+    """Keys differing by < ε join, > ε don't — and the sort-merge
+    verification pass keeps the band NON-transitive (a chained class
+    wider than ε must not produce cross pairs farther than ε)."""
+    ks = scheme_ks
+    if not _is_ckks(ks):
+        pytest.skip("ε-band joins are a float-key (ckks) feature")
+    # adjacent grid steps chain: 0, .25, .5, ... each within ε of its
+    # neighbor but NOT of its 2nd neighbor (.5 > ε = .3)
+    lk = _vals(ks, np.asarray([0, 1, 2, 4, 8, 9]))
+    rk = _vals(ks, np.asarray([1, 2, 3, 8, 30]))
+    lt = db.Table.from_arrays(ks, "L", {"k": lk}, jax.random.PRNGKey(7))
+    rt = db.Table.from_arrays(ks, "R", {"k": rk}, jax.random.PRNGKey(8))
+    want = _want_pairs(lk, rk, eps=EPS_BAND)
+    j = db.Join(None, None, on="k", eps=EPS_BAND)
+    res_n = db.execute_join(ks, lt, rt, j, strategy="nested")
+    li, ri = _indexes(ks, lt, rt)
+    res_s = db.execute_join(ks, lt, rt, j, left_indexes=li,
+                            right_indexes=ri)
+    np.testing.assert_array_equal(res_n.pairs, want)
+    np.testing.assert_array_equal(res_s.pairs, want)
+    assert res_s.stats.verify_compares > 0      # the band WAS verified
+    # native-tolerance join is strictly tighter: exact key matches only
+    res_0 = db.execute_join(ks, lt, rt, db.Join(None, None, on="k"),
+                            strategy="nested")
+    np.testing.assert_array_equal(res_0.pairs, _want_pairs(lk, rk))
+
+
+# ---------------------------------------------------------------------------
+# cross-shard joins: the [S, S] pair grid
+# ---------------------------------------------------------------------------
+
+def test_join_shard_invariance_matrix(scheme_ks, rng):
+    """S ∈ {1, 2, 3, 4}: sharded join pairs byte-identical to the
+    unsharded plan, nested AND sort-merge (acceptance criterion)."""
+    ks = scheme_ks
+    lt, rt, lk, rk, _, _ = _tables(ks, rng, n_l=23, n_r=15)
+    j = db.Join(None, None, on="k")
+    ref = db.execute_join(ks, lt, rt, j, strategy="nested")
+    np.testing.assert_array_equal(ref.pairs, _want_pairs(lk, rk))
+    for S in SHARD_COUNTS:
+        sl = db.ShardedTable.from_table(ks, lt, spec=db.ShardSpec.create(S))
+        sr = db.ShardedTable.from_table(ks, rt, spec=db.ShardSpec.create(S))
+        res = db.execute_join(ks, sl, sr, j, strategy="nested")
+        np.testing.assert_array_equal(res.pairs, ref.pairs,
+                                      err_msg=f"nested pairs differ at S={S}")
+        assert res.stats.shards == (S, S)
+        sil = db.ShardedIndex.build(ks, sl, "k")
+        sir = db.ShardedIndex.build(ks, sr, "k")
+        res_s = db.execute_join(ks, sl, sr, j, left_indexes={"k": sil},
+                                right_indexes={"k": sir})
+        assert res_s.stats.strategy == "sort_merge"
+        np.testing.assert_array_equal(
+            res_s.pairs, ref.pairs,
+            err_msg=f"sort-merge pairs differ at S={S}")
+
+
+def test_join_mixed_table_and_sharded(scheme_ks, rng):
+    """Table × ShardedTable joins dispatch to the shard executor and
+    stay byte-identical (the plain side wraps as one ciphertext-reusing
+    shard)."""
+    ks = scheme_ks
+    lt, rt, lk, rk, _, _ = _tables(ks, rng, n_l=14, n_r=10)
+    j = db.Join(None, None, on="k")
+    ref = db.execute_join(ks, lt, rt, j, strategy="nested")
+    sr = db.ShardedTable.from_table(ks, rt, spec=db.ShardSpec.create(2))
+    res = db.execute_join(ks, lt, sr, j, strategy="nested")
+    np.testing.assert_array_equal(res.pairs, ref.pairs)
+    assert res.stats.shards == (1, 2)
+
+
+def test_sharded_join_with_filters(scheme_ks, rng):
+    """Side filters resolve through the sharded filter machinery before
+    the pair grid; pairs match the unsharded filtered join."""
+    ks = scheme_ks
+    lt, rt, lk, rk, lv, rw = _tables(ks, rng, n_l=27, n_r=19)
+    lo = _bound(ks, _vals(ks, 30), -1)
+    hi = _bound(ks, _vals(ks, 150), +1)
+    j = db.Join(db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)), None,
+                on="k")
+    ref = db.execute_join(ks, lt, rt, j, strategy="nested")
+    want = _want_pairs(lk, rk, lmask=(lv >= lo) & (lv <= hi))
+    np.testing.assert_array_equal(ref.pairs, want)
+    for S in (2, 3):
+        sl = db.ShardedTable.from_table(ks, lt, spec=db.ShardSpec.create(S))
+        sr = db.ShardedTable.from_table(ks, rt, spec=db.ShardSpec.create(S))
+        res = db.execute_join(ks, sl, sr, j, strategy="nested")
+        np.testing.assert_array_equal(res.pairs, want)
+
+
+def test_eps_band_join_sharded(scheme_ks, rng):
+    ks = scheme_ks
+    if not _is_ckks(ks):
+        pytest.skip("ε-band joins are a float-key (ckks) feature")
+    lk = _vals(ks, np.asarray([0, 1, 2, 4, 8, 9, 12]))
+    rk = _vals(ks, np.asarray([1, 2, 3, 8, 30]))
+    lt = db.Table.from_arrays(ks, "L", {"k": lk}, jax.random.PRNGKey(9))
+    rt = db.Table.from_arrays(ks, "R", {"k": rk}, jax.random.PRNGKey(10))
+    want = _want_pairs(lk, rk, eps=EPS_BAND)
+    j = db.Join(None, None, on="k", eps=EPS_BAND)
+    for S in (2, 4):
+        sl = db.ShardedTable.from_table(ks, lt, spec=db.ShardSpec.create(S))
+        sr = db.ShardedTable.from_table(ks, rt, spec=db.ShardSpec.create(S))
+        res = db.execute_join(ks, sl, sr, j, strategy="nested")
+        np.testing.assert_array_equal(res.pairs, want)
+        sil = db.ShardedIndex.build(ks, sl, "k")
+        sir = db.ShardedIndex.build(ks, sr, "k")
+        res_s = db.execute_join(ks, sl, sr, j, left_indexes={"k": sil},
+                                right_indexes={"k": sir})
+        np.testing.assert_array_equal(res_s.pairs, want)
+
+
+# ---------------------------------------------------------------------------
+# batched K-query joins through the QueryServer
+# ---------------------------------------------------------------------------
+
+def test_query_server_dedupes_join_grids(scheme_ks, rng):
+    """K joins against the same right table/key share ONE pair-grid
+    launch, and their left filter leaves fuse into the batch's shared
+    scan Eval alongside a plain query."""
+    ks = scheme_ks
+    lt, rt, lk, rk, lv, rw = _tables(ks, rng, n_l=30, n_r=14)
+    server = db.QueryServer(ks, lt, batch=4)
+    lo = _bound(ks, _vals(ks, 20), -1)
+    hi = _bound(ks, _vals(ks, 90), +1)
+    q1 = server.submit(db.Range("v", _enc(ks, lo, 0), _enc(ks, hi, 1)))
+    j1 = server.submit_join(db.Join(None, None, on="k"), rt)
+    j2 = server.submit_join(
+        db.Join(db.Range("v", _enc(ks, lo, 2), _enc(ks, hi, 3)), None,
+                on="k"), rt)
+    j3 = server.submit_join(
+        db.Join(None, db.Eq("w", _enc(ks, rw[2], 4)), on="k"), rt)
+    res = server.run()
+    b = server.batch_log[0]
+    assert (b.queries, b.joins) == (1, 3)
+    assert b.grid_evals == 1              # three joins, ONE deduped grid
+    assert b.eval_calls == 1              # query + join left leaves fused
+    lmask = (lv >= lo) & (lv <= hi)
+    np.testing.assert_array_equal(res[q1].mask, lmask)
+    np.testing.assert_array_equal(res[j1].pairs, _want_pairs(lk, rk))
+    np.testing.assert_array_equal(res[j2].pairs,
+                                  _want_pairs(lk, rk, lmask=lmask))
+    np.testing.assert_array_equal(res[j3].pairs,
+                                  _want_pairs(lk, rk, rmask=rw == rw[2]))
+
+
+def test_query_server_sort_merge_join(scheme_ks, rng):
+    ks = scheme_ks
+    lt, rt, lk, rk, _, _ = _tables(ks, rng, n_l=16, n_r=12)
+    li, ri = _indexes(ks, lt, rt)
+    server = db.QueryServer(ks, lt, indexes=li, batch=2)
+    jid = server.submit_join(db.Join(None, None, on="k"), rt,
+                             right_indexes=ri)
+    res = server.run()
+    assert res[jid].stats.strategy == "sort_merge"
+    assert server.batch_log[0].grid_evals == 0
+    np.testing.assert_array_equal(res[jid].pairs, _want_pairs(lk, rk))

@@ -1,0 +1,122 @@
+#!/usr/bin/env python
+"""Docs gate (CI): markdown links must resolve, public db API documented.
+
+Two checks, both fail-on-regression:
+
+  1. LINKS.  Every relative markdown link in README.md, docs/**/*.md and
+     src/repro/db/README.md must point at an existing file (resolved
+     from the linking file's directory); same-file `#anchor` links must
+     match a heading in that file.  External (http/https/mailto) links
+     are out of scope — CI must not flake on the network.
+  2. DOCSTRINGS.  Every public module / class / function / method under
+     src/repro/db/ (names not starting with "_") must carry a
+     docstring.  The db layer is the repo's public query API; an
+     undocumented entry point is a regression.
+
+Usage:  python tools/check_docs.py  (exit 1 on any failure)
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", REPO / "src" / "repro" / "db" / "README.md"]
+DOC_GLOBS = [REPO / "docs"]
+PY_ROOT = REPO / "src" / "repro" / "db"
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _heading_slugs(text: str) -> set:
+    """GitHub-style anchor slugs for every markdown heading."""
+    slugs = set()
+    for line in text.splitlines():
+        m = re.match(r"#{1,6}\s+(.*)", line)
+        if m:
+            slug = m.group(1).strip().lower()
+            slug = re.sub(r"[^\w\s-]", "", slug)
+            slugs.add(re.sub(r"\s+", "-", slug))
+    return slugs
+
+
+def check_links() -> list:
+    """Relative links + same-file anchors across the doc set."""
+    files = list(DOC_FILES)
+    for root in DOC_GLOBS:
+        if root.is_dir():
+            files.extend(sorted(root.rglob("*.md")))
+    errors = []
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md.relative_to(REPO)}: doc file missing")
+            continue
+        text = md.read_text()
+        slugs = _heading_slugs(text)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            if target.startswith("#"):
+                if target[1:] not in slugs:
+                    errors.append(f"{md.relative_to(REPO)}: dangling anchor "
+                                  f"{target!r}")
+                continue
+            path = target.split("#", 1)[0]
+            if not (md.parent / path).resolve().exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"{target!r}")
+    return errors
+
+
+def _missing_docstrings(tree: ast.Module, rel: str) -> list:
+    """Public defs (module/class level) without docstrings."""
+    errors = []
+    if ast.get_docstring(tree) is None:
+        errors.append(f"{rel}: missing module docstring")
+
+    def walk(node, prefix: str):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                name = child.name
+                if name.startswith("_"):        # private / dunder: exempt
+                    continue
+                if ast.get_docstring(child) is None:
+                    kind = ("class" if isinstance(child, ast.ClassDef)
+                            else "function")
+                    errors.append(
+                        f"{rel}: public {kind} {prefix}{name} "
+                        f"(line {child.lineno}) has no docstring")
+                if isinstance(child, ast.ClassDef):
+                    walk(child, f"{prefix}{name}.")
+
+    walk(tree, "")
+    return errors
+
+
+def check_docstrings() -> list:
+    """Every public function/class under src/repro/db/ is documented."""
+    errors = []
+    for py in sorted(PY_ROOT.rglob("*.py")):
+        rel = str(py.relative_to(REPO))
+        tree = ast.parse(py.read_text())
+        errors.extend(_missing_docstrings(tree, rel))
+    return errors
+
+
+def main() -> int:
+    """Run both checks; print findings; nonzero exit on any."""
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"FAIL {e}")
+    if errors:
+        print(f"{len(errors)} docs check failure(s)")
+        return 1
+    print("docs checks passed (links + public db docstrings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
