@@ -67,18 +67,37 @@ def _parse_derived(derived: str) -> Dict[str, object]:
 
 
 def write_json(path: str, *, meta: Dict[str, object] | None = None,
-               extra: Dict[str, object] | None = None) -> dict:
+               extra: Dict[str, object] | None = None,
+               append: bool = False) -> dict:
     """Dump every emitted row (plus free-form `extra` sections) as one
     machine-readable JSON document — the cross-PR perf trajectory file
     (BENCH_db.json etc.).  Re-parses each row's derived string into a
-    typed dict so downstream tooling never scrapes the CSV."""
-    doc = {
-        "meta": dict(meta or {}),
-        "passes": [{"name": n, "us_per_call": round(us, 2),
-                    **_parse_derived(d)} for n, us, d in ROWS],
-    }
+    typed dict so downstream tooling never scrapes the CSV.
+
+    `append=True` merges into an existing document instead of replacing
+    it: passes with the same name are overwritten in place, new passes
+    append at the end, and `meta` / `extra` keys update over what is
+    already there — so a partial re-run (e.g. just the write-path
+    passes) keeps the rest of the trajectory machine-comparable."""
+    passes = [{"name": n, "us_per_call": round(us, 2),
+               **_parse_derived(d)} for n, us, d in ROWS]
+    doc = {"meta": dict(meta or {}), "passes": passes}
     if extra:
         doc.update(extra)
+    if append:
+        try:
+            with open(path) as f:
+                old = json.load(f)
+        except (OSError, ValueError):
+            old = None
+        if old is not None:
+            merged = {p["name"]: p for p in old.get("passes", [])}
+            merged.update({p["name"]: p for p in passes})
+            old["passes"] = list(merged.values())
+            old["meta"] = {**old.get("meta", {}), **doc["meta"]}
+            for k, v in (extra or {}).items():
+                old[k] = v
+            doc = old
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=False)
         f.write("\n")

@@ -36,9 +36,19 @@ Demonstrates the database-perspective payoff on the paper's hg38 dataset
                       plus the same join on 4-shard tables (the [S, S]
                       pair grid), byte-identical pairs required
 
+  * write pass     — the delta-run write path on the same hg38 table:
+                      sustained inserts/sec while a QueryServer keeps
+                      answering (FIFO mutation queue), the base ∪ delta
+                      index probe within its 2·log2(n_base) +
+                      2·log2(n_delta) per-lane budget, and delta
+                      compaction through the log-depth merge network
+                      (merge compares asserted strictly below the
+                      from-scratch rebuild cost)
+
 Every pass lands in BENCH_db.json (machine-readable: wall-clock,
 rows/s, compare counts per pass) so the perf trajectory is tracked
-across PRs — benchmarks/common.write_json.
+across PRs — benchmarks/common.write_json (append mode supports
+partial re-runs, e.g. just the db.write.* passes).
 
 Default profile is test-bfv in paper mode with the Thm 4.1 zero-weight
 CEK precondition (exact compares, ~6x faster than gadget mode — the op
@@ -83,7 +93,7 @@ def _timed(fn, reps: int = 1):
 
 
 def run(profile: str = "test-bfv", mode: str = "paper",
-        rows: int | None = None, queries: int = 8, tag: str = "db") -> None:
+        rows: int | None = None, queries: int = 8, tag: str = "db") -> tuple:
     ks = _keys(profile, mode)
     params = ks.params
     vals = load_dataset("hg38", scheme="bfv", t=params.t)
@@ -202,6 +212,7 @@ def run(profile: str = "test-bfv", mode: str = "paper",
         emit(f"{tag}.e2e.{name}", e2e_s * 1e6,
              f"rows={len(dvals)};matched={int(want_mask.sum())};"
              f"exact={exact}")
+    return ks, table, idx, vals
 
 
 GRID = 0.25       # float lattice step (>> test-ckks tolerance ~0.016)
@@ -482,6 +493,152 @@ def run_join(profile: str = "test-bfv", mode: str = "paper",
     return summary
 
 
+def run_write(profile: str = "test-bfv", mode: str = "paper",
+              rows: int | None = None, n_insert: int = 0, steps: int = 4,
+              tag: str = "db.write", base: tuple | None = None) -> dict:
+    """The encrypted write path: delta-run ingest while serving, the
+    union (base ∪ delta) index probe, and delta compaction.
+
+    Three passes, each with its acceptance check asserted inline:
+
+      * insert_serve — a QueryServer interleaves insert chunks with
+        range queries (FIFO: every query sees exactly the writes
+        submitted before it); records sustained inserts/sec while
+        serving, every answer checked against the running plaintext.
+      * union_probe  — after the ingest (~5% new rows by default), a
+        point lookup over base ∪ delta must return the from-scratch
+        plaintext answer exactly, in
+        <= 2·ceil(log2 n_base) + 2·ceil(log2 n_delta) compares per
+        probe lane (base fan-out + one per-run binary search).
+      * compact      — folding the delta through the log-depth merge
+        network must cost O((n_delta + block)·log) merge compares,
+        strictly below the O(n log^2 n) from-scratch rebuild; the
+        post-compaction probe stays exact and the merged index sorted.
+    """
+    from repro.core.compare import next_pow2
+
+    if base is not None:
+        ks, table, idx, vals = base
+    else:
+        ks = _keys(profile, mode)
+        vals = load_dataset("hg38", scheme="bfv", t=ks.params.t)
+        if rows:
+            vals = vals[:rows]
+        vals = vals.astype(np.int64)
+        table = db.Table.from_arrays(ks, "hg38_w", {"v": vals},
+                                     jax.random.PRNGKey(2))
+        idx = db.SortedIndex.build(ks, table, "v")
+    indexes = {"v": idx}
+    n = len(vals)
+    rng = np.random.default_rng(7)
+    m = n_insert if n_insert > 0 else max(8, round(0.05 * n))
+
+    # ---- sustained ingest while serving (FIFO mutation queue) -----------
+    server = db.QueryServer(ks, table, indexes=indexes, batch=4)
+    all_vals = vals.copy()
+    alive = np.ones(n, bool)
+    chunks = np.array_split(rng.choice(vals, m), steps)
+    qok, gid_ok = True, True
+    t0 = time.perf_counter()
+    for i, chunk in enumerate(chunks):
+        ins = server.submit_insert({"v": chunk},
+                                   jax.random.PRNGKey(1000 + i))
+        lo, hi = np.sort(rng.choice(vals, 2, replace=False))
+        lo, hi = int(lo), int(hi)
+        qid = server.submit(db.Range("v", _enc(ks, lo, 2000 + i),
+                                     _enc(ks, hi, 3000 + i)))
+        res = server.run()
+        start = len(all_vals)
+        all_vals = np.concatenate([all_vals, chunk])
+        alive = np.concatenate([alive, np.ones(len(chunk), bool)])
+        gid_ok &= np.array_equal(res[ins].row_ids,
+                                 np.arange(start, start + len(chunk)))
+        want = (all_vals >= lo) & (all_vals <= hi) & alive
+        qok &= np.array_equal(res[qid].mask, want)
+    serve_s = time.perf_counter() - t0
+    # a tombstone mid-stream: the very next query must exclude it
+    dead = [n // 2, n // 2 + 1]
+    did = server.submit_delete(dead)
+    lo, hi = int(all_vals.min()), int(all_vals.max())
+    qid = server.submit(db.Range("v", _enc(ks, lo, 2500),
+                                 _enc(ks, hi, 3500)))
+    res = server.run()
+    alive[dead] = False
+    qok &= (res[did].deleted == len(dead)
+            and np.array_equal(res[qid].mask, alive))
+    dbuild = sum(b.delta_build_compares for b in server.batch_log)
+    emit(f"{tag}.insert_serve", serve_s * 1e6,
+         f"inserts={m};inserts_per_s={m / serve_s:.1f};steps={steps};"
+         f"exact={qok and gid_ok};delta_build_compares={dbuild}")
+    assert qok and gid_ok, "served answers diverged from plaintext"
+
+    # ---- union probe: base fan-out + one per-run binary search ----------
+    target = int(all_vals[n + m // 2])            # lives in the delta run
+    q_eq = db.Eq("v", _enc(ks, target, 4000))
+    db.execute(ks, table, q_eq, indexes=indexes)              # warm
+    probe_s, res = _timed(
+        lambda: db.execute(ks, table, q_eq, indexes=indexes), reps=2)
+    want = (all_vals == target) & alive
+    exact = np.array_equal(res.mask, want)
+    n_b, n_d = next_pow2(table.n_rows), next_pow2(table.n_delta)
+    per_lane = (max(1, (n_b - 1).bit_length())
+                + max(1, (n_d - 1).bit_length()))
+    bound = 2 * 2 * per_lane                      # 2 lanes (lo, hi), <=2x
+    emit(f"{tag}.union_probe", probe_s * 1e6,
+         f"compares={res.stats.index_compares};bound={bound};"
+         f"n_base={table.n_rows};n_delta={table.n_delta};"
+         f"matched={int(want.sum())};exact={exact}")
+    assert exact, "union probe diverged from the from-scratch answer"
+    assert res.stats.index_compares <= bound, (
+        f"union probe blew the 2·log2(n_base)+2·log2(n_delta) budget: "
+        f"{res.stats.index_compares} > {bound}")
+
+    # ---- compaction: merge network, never a rebuild ---------------------
+    nb, nd = table.n_rows, table.n_delta
+    t0 = time.perf_counter()
+    cstats = db.compact(ks, table, indexes)
+    compact_s = time.perf_counter() - t0
+    L = next_pow2(max(nb, nd))
+    merge_bound = cstats.merge_rounds * L * (1 + max(1, L.bit_length() - 1))
+    sorted_ok = bool(np.array_equal(all_vals[indexes["v"].perm],
+                                    np.sort(all_vals)))
+    db.execute(ks, table, q_eq, indexes=indexes)              # warm
+    post_s, post = _timed(
+        lambda: db.execute(ks, table, q_eq, indexes=indexes), reps=2)
+    post_ok = np.array_equal(post.mask, want)
+    emit(f"{tag}.compact", compact_s * 1e6,
+         f"merge_compares={cstats.merge_compares};bound={merge_bound};"
+         f"rebuild_compares={cstats.rebuild_compares};"
+         f"rounds={cstats.merge_rounds};sorted_ok={sorted_ok};"
+         f"post_probe_compares={post.stats.index_compares};"
+         f"post_exact={post_ok}")
+    assert not table.has_delta and sorted_ok and post_ok
+    assert cstats.merge_compares <= merge_bound, (
+        f"compaction exceeded the (n_delta + block)·log merge bound: "
+        f"{cstats.merge_compares} > {merge_bound}")
+    if nb >= 32:        # at toy sizes the pow2-padded merge can tie/lose
+        assert cstats.merge_compares < cstats.rebuild_compares, (
+            f"compaction cost a rebuild, not a merge: "
+            f"{cstats.merge_compares} >= {cstats.rebuild_compares}")
+
+    return {
+        "rows_base": n, "rows_inserted": m, "steps": steps,
+        "inserts_per_s": round(m / serve_s, 1),
+        "serve_wall_s": round(serve_s, 3),
+        "delta_build_compares": dbuild,
+        "union_probe": {"wall_s": round(probe_s, 4),
+                        "compares": res.stats.index_compares,
+                        "bound": bound, "exact": bool(exact)},
+        "compact": {"wall_s": round(compact_s, 3),
+                    "merge_compares": cstats.merge_compares,
+                    "merge_bound": merge_bound,
+                    "rebuild_compares": cstats.rebuild_compares,
+                    "merge_beats_rebuild": bool(
+                        cstats.merge_compares < cstats.rebuild_compares),
+                    "post_probe_compares": post.stats.index_compares},
+    }
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--profile", default="test-bfv")
@@ -496,11 +653,17 @@ if __name__ == "__main__":
                     help="k for the sharded filter+topk pass")
     ap.add_argument("--join-rows", type=int, default=256,
                     help="left rows for the join pass (0 = skip)")
+    ap.add_argument("--write-rows", type=int, default=0,
+                    help="inserted rows for the write pass "
+                         "(0 = 5%% of base, -1 = skip)")
     ap.add_argument("--json", default="BENCH_db.json",
                     help="machine-readable output path ('' = skip)")
+    ap.add_argument("--append", action="store_true",
+                    help="merge passes into an existing json trajectory "
+                         "instead of replacing it (partial re-runs)")
     args = ap.parse_args()
-    run(profile=args.profile, mode=args.mode, rows=args.rows,
-        queries=args.queries)
+    base = run(profile=args.profile, mode=args.mode, rows=args.rows,
+               queries=args.queries)
     sharded_summary = None
     if args.shards:
         sharded_summary = run_sharded(profile=args.profile, mode=args.mode,
@@ -512,6 +675,11 @@ if __name__ == "__main__":
                                 rows=args.join_rows)
     if args.ckks_rows:
         run_ckks(rows=args.ckks_rows, queries=max(2, args.queries // 2))
+    write_summary = None
+    if args.write_rows >= 0:
+        write_summary = run_write(profile=args.profile, mode=args.mode,
+                                  rows=args.rows, n_insert=args.write_rows,
+                                  base=base)
     if args.json:
         write_json(args.json,
                    meta={"benchmark": "db_engine", "profile": args.profile,
@@ -519,4 +687,6 @@ if __name__ == "__main__":
                          "backend": jax.default_backend(),
                          "devices": jax.device_count()},
                    extra={"sharded": sharded_summary,
-                          "join": join_summary})
+                          "join": join_summary,
+                          "write": write_summary},
+                   append=args.append)

@@ -136,11 +136,19 @@ def range_query(ks: KeySet, column: Ciphertext, ct_lo: Ciphertext,
 
 
 def next_pow2(n: int) -> int:
-    """Smallest power of two >= n (n >= 1).  THE pow2-padding geometry:
-    table ingest, sort/top-k sentinel padding and the sharded merge
-    networks all size their rows through this one helper, so their
-    padded shapes can never drift apart."""
-    return 1 << max(0, (int(n) - 1).bit_length())
+    """Smallest power of two >= max(n, 1) (n >= 0).  THE pow2-padding
+    geometry: table ingest, sort/top-k sentinel padding and the sharded
+    merge networks all size their rows through this one helper, so their
+    padded shapes can never drift apart.  n <= 1 returns 1 — the minimum
+    block: an EMPTY column still pads to one slot, not two (naively,
+    `(0 - 1).bit_length() == 1` would give 2), which is what lets empty
+    tables and freshly-compacted delta runs share the ordinary geometry.
+    A negative count is always a caller bug, never a geometry.
+    """
+    n = int(n)
+    if n < 0:
+        raise ValueError(f"row count must be >= 0, got {n}")
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
 def _bitonic_pairs(n: int):

@@ -12,6 +12,12 @@ plan stage into one batched Eval, and a batched multi-query server.
     compile_plan / execute — lower + run a plan (indexes optional)
     execute_join — batched nested-loop or sort-merge join execution
     QueryServer  — K client queries against one table in one fused pass
+    compact      — fold a table's pending delta run into base + indexes
+
+Write path: `Table.insert/update/delete` land rows in a pow2-padded
+delta run (deletes are host-side tombstones); every read answers over
+base ∪ delta, and `compact` retires the run through the log-depth merge
+network without re-encrypting a single base row.
 
 Sharded variants (repro.db.shard): ShardSpec / ShardedTable /
 ShardedIndex / ShardedQueryServer partition rows across a device mesh
@@ -60,6 +66,11 @@ from repro.db.plan import (  # noqa: F401
     compile_join,
     compile_plan,
 )
+from repro.db.delta import (  # noqa: F401
+    CompactionStats,
+    compact,
+    merge_index_runs,
+)
 from repro.db.table import Table  # noqa: F401
 
 
@@ -67,14 +78,16 @@ _SHARD_EXPORTS = ("ShardSpec", "ShardedTable", "ShardedIndex",
                   "ShardedQueryServer", "ShardedExecStats",
                   "execute_sharded", "execute_join_sharded")
 
+_SERVE_EXPORTS = ("QueryServer", "MutationResult")
+
 
 def __getattr__(name):
     # lazy: keeps `python -m repro.db.query_serve` free of the runpy
     # double-import warning while preserving `db.QueryServer`; the shard
     # subsystem loads on first use for the same reason
-    if name == "QueryServer":
-        from repro.db.query_serve import QueryServer
-        return QueryServer
+    if name in _SERVE_EXPORTS:
+        from repro.db import query_serve as _qs
+        return getattr(_qs, name)
     if name in _SHARD_EXPORTS:
         from repro.db import shard as _shard
         return getattr(_shard, name)

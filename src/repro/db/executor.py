@@ -45,7 +45,7 @@ from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
 from repro.db import plan as P
 from repro.db.index import SortedIndex
-from repro.db.table import Table
+from repro.db.table import Table, rows_to_mask
 
 
 @dataclasses.dataclass
@@ -53,10 +53,12 @@ class ExecStats:
     """What the engine actually did — benchmarks and tests assert on this."""
     eval_calls: int = 0            # batched Eval launches in the filter stage
     scan_compares: int = 0         # comparisons inside fused linear scans
-    index_compares: int = 0        # binary-search probe comparisons
+    index_compares: int = 0        # binary-search probe comparisons (the
+    #                                base index AND any delta-run index)
     scan_leaves: int = 0
     indexed_leaves: int = 0
     order_compares: int = 0        # sort / top-k network comparisons
+    delta_build_compares: int = 0  # lazy per-delta-run index builds
 
     @property
     def filter_compares(self) -> int:
@@ -69,7 +71,7 @@ class QueryResult:
     """One executed plan's answer: matched/ordered row ids, the filter
     mask, still-encrypted projected columns, and the engine stats."""
     row_ids: np.ndarray                      # selected (ordered) row ids
-    mask: np.ndarray                         # [n_rows] filter mask
+    mask: np.ndarray                         # [n_total] global filter mask
     columns: Dict[str, Ciphertext]           # projected ciphertexts
     stats: ExecStats
 
@@ -123,15 +125,18 @@ def jitted_comparator(ks: KeySet):
 
 def fused_eval(ks: KeySet, table: Table, atoms: List[P.Atom], *,
                engine: str = "jnp") -> np.ndarray:
-    """RAW eval values for all atoms in ONE batched Eval: [A, N] int64.
+    """RAW eval values for all atoms in ONE batched Eval: [A, N] int64
+    (N = `table.scan_width`: a pending delta run's slots ride the SAME
+    launch as the base block — base ∪ delta costs one program, not two).
 
     Thresholds are deliberately NOT applied here: each atom decodes its
     own τ (profile default or ε-derived) host-side in `scan_leaf_mask`,
     so a plan mixing exact and ε-band predicates still runs one launch.
     """
+    cols = {a.column: table.scan_column(a.column) for a in atoms}
     col = Ciphertext(
-        jnp.stack([table.columns[a.column].c0 for a in atoms]),
-        jnp.stack([table.columns[a.column].c1 for a in atoms]))
+        jnp.stack([cols[a.column].c0 for a in atoms]),
+        jnp.stack([cols[a.column].c1 for a in atoms]))
     bounds = Ciphertext(
         jnp.stack([a.value.c0 for a in atoms])[:, None],
         jnp.stack([a.value.c1 for a in atoms])[:, None])
@@ -212,28 +217,65 @@ def combine_tree(tree: Optional[tuple], leaf_masks: List[np.ndarray],
     raise ValueError(f"bad tree node {tree!r}")
 
 
+def delta_probe_index(ks: KeySet, table: Table, column: str,
+                      stats: ExecStats):
+    """The per-delta-run `SortedIndex` for an indexed union probe, with
+    lazy-build compares attributed to `stats` exactly once per delta
+    state (shared by executor and QueryServer).  None without a delta."""
+    cached = table._delta_index_cache.get(column)
+    fresh = not (cached is not None and cached[0] == table.version)
+    didx = table.delta_index(ks, column)
+    if didx is not None and fresh:
+        stats.delta_build_compares += didx.build_compares
+    return didx
+
+
+def index_leaf_mask(ks: KeySet, table: Table, idx: SortedIndex,
+                    leaf, stats: ExecStats) -> np.ndarray:
+    """Resolve one indexed leaf over base ∪ delta as a
+    [table.scan_width] slot mask.
+
+    The base `SortedIndex` answers with ~2·log2(n_base) probe compares;
+    a pending delta run adds one per-run binary search — at most
+    2·ceil(log2 |delta|) extra compares — against its own (lazily built,
+    cached) sorted run.  Base row ids ARE base slot ids; delta-local
+    hits shift past the base block."""
+    before = idx.search_compares
+    if isinstance(leaf, P.Range):
+        rows = idx.search_range(ks, leaf.lo, leaf.hi, eps=leaf.eps)
+    else:
+        rows = idx.point_lookup(ks, leaf.value, eps=leaf.eps)
+    stats.index_compares += idx.search_compares - before
+    slots = [np.asarray(rows, np.int64)]
+    didx = delta_probe_index(ks, table, leaf.column, stats)
+    if didx is not None:
+        before = didx.search_compares
+        if isinstance(leaf, P.Range):
+            drows = didx.search_range(ks, leaf.lo, leaf.hi, eps=leaf.eps)
+        else:
+            drows = didx.point_lookup(ks, leaf.value, eps=leaf.eps)
+        stats.index_compares += didx.search_compares - before
+        slots.append(table.n_padded + np.asarray(drows, np.int64))
+    return rows_to_mask(np.concatenate(slots), table.scan_width)
+
+
 def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
                  indexes: Optional[Dict[str, SortedIndex]] = None,
                  engine: str = "jnp",
                  stats: Optional[ExecStats] = None) -> List[np.ndarray]:
-    """Per-leaf row masks: indexed leaves via binary search, the rest via
-    one fused scan."""
+    """Per-leaf row masks over the union slot space (`table.scan_width`):
+    indexed leaves via binary search (base index + per-delta-run
+    search), the rest via one fused scan covering base AND delta."""
     stats = stats if stats is not None else ExecStats()
     indexes = indexes or {}
-    N = table.n_padded
+    W = table.scan_width
     leaf_masks: List[Optional[np.ndarray]] = [None] * plan.num_leaves
     scan_atoms: List[P.Atom] = []
     scan_slices: List[Tuple[int, int, int]] = []   # (leaf, start, count)
     for i, leaf in enumerate(plan.leaves):
         idx = indexes.get(leaf.column)
         if idx is not None:
-            before = idx.search_compares
-            if isinstance(leaf, P.Range):
-                leaf_masks[i] = idx.mask_range(ks, leaf.lo, leaf.hi, N,
-                                               eps=leaf.eps)
-            else:
-                leaf_masks[i] = idx.mask_eq(ks, leaf.value, N, eps=leaf.eps)
-            stats.index_compares += idx.search_compares - before
+            leaf_masks[i] = index_leaf_mask(ks, table, idx, leaf, stats)
             stats.indexed_leaves += 1
         else:
             atoms = plan.scan_atoms(i)
@@ -243,7 +285,7 @@ def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
     if scan_atoms:
         vals = fused_eval(ks, table, scan_atoms, engine=engine)
         stats.eval_calls += 1
-        stats.scan_compares += len(scan_atoms) * N
+        stats.scan_compares += len(scan_atoms) * W
         for leaf_i, start, count in scan_slices:
             leaf_masks[leaf_i] = scan_leaf_mask(ks, scan_atoms, vals,
                                                 start, count)
@@ -317,10 +359,11 @@ def execute(ks: KeySet, table, query, *,
     stats = ExecStats()
     leaf_masks = filter_masks(ks, table, plan, indexes=indexes,
                               engine=engine, stats=stats)
-    mask = combine_tree(plan.tree, leaf_masks, table.n_padded)
-    mask &= table.valid
-    row_ids = np.nonzero(mask)[0]
+    slot_mask = combine_tree(plan.tree, leaf_masks, table.scan_width)
+    slot_mask &= table.slot_valid          # pads AND tombstones excluded
+    row_ids = table.slot_global_ids[np.nonzero(slot_mask)[0]]
+    mask = rows_to_mask(row_ids, table.n_total)    # [n_total] global mask
     row_ids = order_rows(ks, table, plan.query, row_ids, stats)
     columns = {c: table.gather(c, row_ids) for c in plan.query.select}
-    return QueryResult(row_ids=row_ids, mask=mask[:table.n_rows],
+    return QueryResult(row_ids=row_ids, mask=mask,
                        columns=columns, stats=stats)

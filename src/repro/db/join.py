@@ -286,14 +286,28 @@ def _side_mask(ks: KeySet, table: Table, plan: Optional[P.CompiledPlan], *,
 
     `leaf_masks` short-circuits leaf resolution — the batched
     QueryServer passes masks whose leaves already rode its shared
-    launches, so a join side never pays a second scan."""
+    launches, so a join side never pays a second scan.
+
+    A side with a PENDING DELTA RUN is refused: the pair grids and
+    sort-merge runs below address rows by base slot, so compact first
+    (`repro.db.delta.compact` — joins resume once the delta folds).
+    Tombstoned rows need no such step; they just drop out of the side
+    mask here (`alive`)."""
+    if table.has_delta:
+        raise ValueError(
+            f"table {table.name!r} has {table.n_delta} uncompacted delta "
+            "rows — joins address base slots; run repro.db.delta.compact "
+            "first")
     if plan is None:
-        return table.valid.copy()
+        mask = table.valid.copy()
+        mask[:table.n_rows] &= table.alive
+        return mask
     if leaf_masks is None:
         leaf_masks = X.filter_masks(ks, table, plan, indexes=indexes,
                                     engine=engine, stats=stats)
     mask = X.combine_tree(plan.tree, leaf_masks, table.n_padded)
     mask &= table.valid
+    mask[:table.n_rows] &= table.alive
     q = plan.query
     if q.top_k is not None or q.order_by is not None or q.limit is not None:
         row_ids = X.order_rows(ks, table, q, np.nonzero(mask)[0], stats)

@@ -25,6 +25,17 @@ Per-query combine / order / limit stages then run on each query's own
 mask (they depend on per-query match sets, so they cannot share a
 program; they reuse the executor's stage helpers).
 
+MUTATIONS interleave with queries on the same queue (`submit_insert` /
+`submit_delete` / `submit_update`): the drain splits the queue into
+maximal same-kind runs — submit order is preserved, so a query enqueued
+after an insert sees the inserted rows — and each query batch answers
+over base ∪ delta (the shared fused scan widens by the delta block; the
+lane-batched index searches add ONE per-delta-run search per column).
+`compact()` retires the pending delta between batches through the merge
+network (`repro.db.delta.compact`) — cooperative "background"
+compaction; `compact_threshold` triggers it automatically once the
+delta outgrows the threshold.
+
 Usage:
   PYTHONPATH=src python -m repro.db.query_serve --dataset hg38 \
       --requests 8 --batch 4 --rows 4096
@@ -59,9 +70,28 @@ class BatchStats:
     eval_calls: int = 0
     scan_compares: int = 0
     index_compares: int = 0
+    delta_build_compares: int = 0  # lazy per-delta-run index builds
     grid_evals: int = 0            # deduped nested-join pair-grid launches
     pair_compares: int = 0         # deduped pair-grid lanes
     wall_s: float = 0.0
+
+
+@dataclasses.dataclass
+class MutationResult:
+    """Outcome of one queued mutation: the inserted rows' global ids
+    (empty for a pure delete) and the newly-tombstoned row count."""
+    kind: str                      # "insert" | "delete" | "update"
+    row_ids: np.ndarray
+    deleted: int = 0
+
+
+@dataclasses.dataclass
+class _QueuedMutation:
+    """A submitted write: insert data, delete rows, or both (update)."""
+    kind: str
+    rows: Optional[np.ndarray] = None
+    data: Optional[Dict[str, np.ndarray]] = None
+    key: Optional[jax.Array] = None
 
 
 @dataclasses.dataclass
@@ -78,15 +108,18 @@ class QueryServer:
 
     def __init__(self, ks: KeySet, table: Table, *,
                  indexes: Optional[Dict[str, SortedIndex]] = None,
-                 batch: int = 4, engine: str = "jnp"):
+                 batch: int = 4, engine: str = "jnp",
+                 compact_threshold: Optional[int] = None):
         self.ks = ks
         self.table = table
         self.indexes = indexes or {}
         self.batch = int(batch)
         self.engine = engine
+        self.compact_threshold = compact_threshold
         self._queue: List[Tuple[int, P.Query]] = []
         self._next_id = 0
         self.batch_log: List[BatchStats] = []
+        self.compaction_log: list = []
 
     # -- queue -------------------------------------------------------------
 
@@ -121,15 +154,86 @@ class QueryServer:
                                              strategy)))
         return qid
 
+    def submit_insert(self, data: Dict[str, np.ndarray],
+                      key: jax.Array) -> int:
+        """Enqueue an insert of new rows; resolves to a `MutationResult`
+        carrying the rows' global ids.  Queries submitted AFTER this see
+        the new rows (FIFO order survives batching)."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation("insert", data=data,
+                                                 key=key)))
+        return qid
+
+    def submit_delete(self, rows) -> int:
+        """Enqueue a tombstone of the given global row ids; resolves to
+        a `MutationResult` with the newly-dead count."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation(
+            "delete", rows=np.asarray(rows, np.int64))))
+        return qid
+
+    def submit_update(self, rows, data: Dict[str, np.ndarray],
+                      key: jax.Array) -> int:
+        """Enqueue an update (tombstone `rows` + insert replacements);
+        resolves to a `MutationResult` with the replacement global ids."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation(
+            "update", rows=np.asarray(rows, np.int64), data=data, key=key)))
+        return qid
+
     def run(self) -> Dict[int, X.QueryResult]:
-        """Drain the queue in batches; returns {request id: result}
-        (a `QueryResult` per query, a `JoinResult` per join)."""
+        """Drain the queue; returns {request id: result} (a `QueryResult`
+        per query, a `JoinResult` per join, a `MutationResult` per
+        mutation).  The queue splits into maximal same-kind runs in
+        submit order: query runs drain in shared-launch batches,
+        mutation runs apply sequentially — so reads always observe
+        exactly the writes submitted before them.  After a mutation run,
+        `compact_threshold` may trigger a cooperative compaction."""
         results: Dict[int, X.QueryResult] = {}
         while self._queue:
-            chunk, self._queue = (self._queue[:self.batch],
-                                  self._queue[self.batch:])
-            results.update(self._run_batch(chunk))
+            is_mut = isinstance(self._queue[0][1], _QueuedMutation)
+            n = 1
+            while (n < len(self._queue) and isinstance(
+                    self._queue[n][1], _QueuedMutation) == is_mut):
+                n += 1
+            chunk, self._queue = self._queue[:n], self._queue[n:]
+            if is_mut:
+                for qid, m in chunk:
+                    results[qid] = self._apply_mutation(m)
+                if (self.compact_threshold is not None
+                        and self.table.n_delta >= self.compact_threshold):
+                    self.compact()
+            else:
+                for i in range(0, len(chunk), self.batch):
+                    results.update(self._run_batch(chunk[i:i + self.batch]))
         return results
+
+    # -- mutations ---------------------------------------------------------
+
+    def _apply_mutation(self, m: _QueuedMutation) -> MutationResult:
+        table = self.table
+        deleted = 0
+        if m.rows is not None:
+            deleted = table.delete(m.rows)
+        row_ids = np.zeros(0, np.int64)
+        if m.data is not None:
+            row_ids = table.insert(self.ks, m.data, m.key)
+        return MutationResult(m.kind, row_ids, deleted=deleted)
+
+    def compact(self):
+        """Retire the pending delta run NOW: fold it into base and merge
+        it into every served index through the log-depth merge network
+        (`repro.db.delta.compact`) — between batches, so in-flight
+        submissions still answered over base ∪ delta stay correct.
+        Returns the `CompactionStats`, also appended to
+        `compaction_log`."""
+        from repro.db.delta import compact as _compact
+        stats = _compact(self.ks, self.table, self.indexes)
+        self.compaction_log.append(stats)
+        return stats
 
     # -- batch execution ---------------------------------------------------
 
@@ -137,7 +241,7 @@ class QueryServer:
                    ) -> Dict[int, X.QueryResult]:
         t0 = time.perf_counter()
         ks, table = self.ks, self.table
-        N = table.n_padded
+        W = table.scan_width         # base block ∪ pending delta block
         queries: List[Tuple[int, P.CompiledPlan]] = []
         joins: List[Tuple[int, P.CompiledJoin, _QueuedJoin]] = []
         for qid, item in chunk:
@@ -193,50 +297,68 @@ class QueryServer:
         # counted once in BatchStats — the two views must not be conflated
         qstats = [X.ExecStats() for _ in plans]
 
-        # ONE lane-batched binary search per index (all queries together)
+        # ONE lane-batched binary search per index (all queries together);
+        # a pending delta run adds ONE more lane-batched search per column
+        # against its own (lazily built, cached) sorted run
         for column, cts in lane_cts.items():
             idx = self.indexes[column]
+            lanes = _stack_cts(cts)
+            strict = np.asarray(lane_strict[column])
+            taus = np.asarray(lane_taus[column], np.int64)
             before = idx.search_compares
-            pos = idx.search(ks, _stack_cts(cts),
-                             np.asarray(lane_strict[column]),
-                             np.asarray(lane_taus[column], np.int64))
+            pos = idx.search(ks, lanes, strict, taus)
             bstats.index_compares += idx.search_compares - before
+            base_counts = idx.last_probe_counts.copy()
+            didx = X.delta_probe_index(ks, table, column, bstats)
+            dpos = dcounts = None
+            if didx is not None:
+                before = didx.search_compares
+                dpos = didx.search(ks, lanes, strict, taus)
+                bstats.index_compares += didx.search_compares - before
+                dcounts = didx.last_probe_counts.copy()
             for j, (pi, li) in enumerate(lane_ref[column]):
                 l, r = int(pos[2 * j]), int(pos[2 * j + 1])
-                leaf_masks[pi][li] = rows_to_mask(idx.perm[l:r], N)
+                slots = [np.asarray(idx.perm[l:r], np.int64)]
                 qstats[pi].indexed_leaves += 1
                 qstats[pi].index_compares += int(
-                    idx.last_probe_counts[2 * j]
-                    + idx.last_probe_counts[2 * j + 1])
+                    base_counts[2 * j] + base_counts[2 * j + 1])
+                if dpos is not None:
+                    dl, dr = int(dpos[2 * j]), int(dpos[2 * j + 1])
+                    slots.append(table.n_padded
+                                 + np.asarray(didx.perm[dl:dr], np.int64))
+                    qstats[pi].index_compares += int(
+                        dcounts[2 * j] + dcounts[2 * j + 1])
+                leaf_masks[pi][li] = rows_to_mask(np.concatenate(slots), W)
 
         # ONE fused Eval for every scan atom of every query in the batch
         if scan_atoms:
             vals = X.fused_eval(ks, table, scan_atoms, engine=self.engine)
             bstats.eval_calls += 1
-            bstats.scan_compares += len(scan_atoms) * N
+            bstats.scan_compares += len(scan_atoms) * W
             for pi, li, start, count in scan_ref:
                 leaf_masks[pi][li] = X.scan_leaf_mask(ks, scan_atoms, vals,
                                                       start, count)
                 qstats[pi].scan_leaves += 1
-                qstats[pi].scan_compares += count * N
+                qstats[pi].scan_compares += count * W
                 qstats[pi].eval_calls = 1     # its share of the fused launch
 
-        # per-query combine + order/limit/project (join slots skip — their
-        # masks resolve inside the join section below)
+        # per-query combine + order/limit/project over the union slot
+        # space (join slots skip — their masks resolve inside the join
+        # section below); pads and tombstones drop via slot_valid
         results: Dict[int, X.QueryResult] = {}
         for pi, (qid, plan) in enumerate(plans):
             if qid is None:
                 continue
             stats = qstats[pi]
-            mask = X.combine_tree(plan.tree, leaf_masks[pi], N)
-            mask &= table.valid
-            row_ids = np.nonzero(mask)[0]
+            slot_mask = X.combine_tree(plan.tree, leaf_masks[pi], W)
+            slot_mask &= table.slot_valid
+            row_ids = table.slot_global_ids[np.nonzero(slot_mask)[0]]
+            gmask = rows_to_mask(row_ids, table.n_total)
             row_ids = X.order_rows(ks, table, plan.query, row_ids, stats)
             columns = {c: table.gather(c, row_ids)
                        for c in plan.query.select}
             results[qid] = X.QueryResult(
-                row_ids=row_ids, mask=mask[:table.n_rows],
-                columns=columns, stats=stats)
+                row_ids=row_ids, mask=gmask, columns=columns, stats=stats)
 
         if joins:
             results.update(self._run_joins(joins, join_slot, leaf_masks,

@@ -54,11 +54,14 @@ def sharded_fused_eval(ks: KeySet, stable: ShardedTable,
                        atoms: List[P.Atom], *,
                        engine: str = "jnp") -> np.ndarray:
     """RAW eval values for all atoms over all shards in ONE launch:
-    [S, A, N_sp] int64.  Thresholds are NOT applied here (same contract
-    as `db.executor.fused_eval`)."""
+    [S, A, shard_scan_width] int64 — each shard's lane covers its base
+    block AND its pending delta run (`scan_stack`), so the write path
+    never costs a second launch.  Thresholds are NOT applied here (same
+    contract as `db.executor.fused_eval`)."""
+    cols = {a.column: stable.scan_stack(a.column) for a in atoms}
     col = Ciphertext(
-        jnp.stack([stable.columns[a.column].c0 for a in atoms], axis=1),
-        jnp.stack([stable.columns[a.column].c1 for a in atoms], axis=1))
+        jnp.stack([cols[a.column].c0 for a in atoms], axis=1),
+        jnp.stack([cols[a.column].c1 for a in atoms], axis=1))
     bounds = Ciphertext(
         jnp.stack([a.value.c0 for a in atoms])[:, None],
         jnp.stack([a.value.c1 for a in atoms])[:, None])
@@ -83,17 +86,60 @@ def sharded_fused_eval(ks: KeySet, stable: ShardedTable,
     return np.asarray(X.jitted_eval(ks)(col, bounds))
 
 
+def shard_delta_probe_index(ks: KeySet, stable: ShardedTable, column: str,
+                            s: int, stats: ShardedExecStats):
+    """Shard s's per-delta-run `SortedIndex` for an indexed union probe,
+    with lazy-build compares attributed exactly once per delta state
+    (the sharded twin of `db.executor.delta_probe_index`)."""
+    cached = stable._delta_index_cache.get((column, s))
+    fresh = not (cached is not None and cached[0] == stable.version)
+    didx = stable.delta_index(ks, column, s)
+    if didx is not None and fresh:
+        stats.delta_build_compares += didx.build_compares
+    return didx
+
+
+def sharded_index_leaf_mask(ks: KeySet, stable: ShardedTable, idx, leaf,
+                            stats: ShardedExecStats) -> List[np.ndarray]:
+    """One indexed leaf over base ∪ delta, per shard, as
+    [shard_scan_width] union-slot masks.  The base `ShardedIndex`
+    fan-out search answers the base block; every shard with a pending
+    delta run adds its own binary search (≤ 2·ceil(log2 d_s) compares)
+    whose delta-local hits shift past the base block."""
+    W = stable.shard_scan_width
+    N0 = stable.n_padded_per_shard
+    before = idx.search_compares
+    if isinstance(leaf, P.Range):
+        masks = idx.shard_masks_range(ks, leaf.lo, leaf.hi, W, eps=leaf.eps)
+    else:
+        masks = idx.shard_masks_eq(ks, leaf.value, W, eps=leaf.eps)
+    stats.index_compares += idx.search_compares - before
+    for s in range(stable.num_shards):
+        didx = shard_delta_probe_index(ks, stable, leaf.column, s, stats)
+        if didx is None:
+            continue
+        before = didx.search_compares
+        if isinstance(leaf, P.Range):
+            drows = didx.search_range(ks, leaf.lo, leaf.hi, eps=leaf.eps)
+        else:
+            drows = didx.point_lookup(ks, leaf.value, eps=leaf.eps)
+        stats.index_compares += didx.search_compares - before
+        masks[s][N0 + np.asarray(drows, np.int64)] = True
+    return masks
+
+
 def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
                          plan: P.CompiledPlan, *,
                          indexes: Optional[Dict[str, object]] = None,
                          engine: str = "jnp",
                          stats: Optional[ShardedExecStats] = None,
                          ) -> List[List[np.ndarray]]:
-    """Per-leaf, per-shard local row masks: indexed leaves via the
-    fan-out search, the rest via one shard-parallel fused scan."""
+    """Per-leaf, per-shard union-slot masks (width `shard_scan_width`):
+    indexed leaves via the fan-out search + per-delta-run probes, the
+    rest via one shard-parallel fused scan covering base AND delta."""
     stats = stats if stats is not None else ShardedExecStats()
     indexes = indexes or {}
-    S, N = stable.num_shards, stable.n_padded_per_shard
+    S, W = stable.num_shards, stable.shard_scan_width
     leaf_masks: List[Optional[List[np.ndarray]]] = [None] * plan.num_leaves
     scan_atoms: List[P.Atom] = []
     scan_slices: List[Tuple[int, int, int]] = []
@@ -105,14 +151,8 @@ def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
                     f"index for column {leaf.column!r} is {type(idx).__name__}"
                     " — a ShardedTable needs ShardedIndex instances "
                     "(db.ShardedIndex.build), not single-table SortedIndex")
-            before = idx.search_compares
-            if isinstance(leaf, P.Range):
-                leaf_masks[i] = idx.shard_masks_range(ks, leaf.lo, leaf.hi,
-                                                      N, eps=leaf.eps)
-            else:
-                leaf_masks[i] = idx.shard_masks_eq(ks, leaf.value, N,
-                                                   eps=leaf.eps)
-            stats.index_compares += idx.search_compares - before
+            leaf_masks[i] = sharded_index_leaf_mask(ks, stable, idx, leaf,
+                                                    stats)
             stats.indexed_leaves += 1
         else:
             atoms = plan.scan_atoms(i)
@@ -122,8 +162,8 @@ def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
     if scan_atoms:
         vals = sharded_fused_eval(ks, stable, scan_atoms, engine=engine)
         stats.eval_calls += 1
-        stats.scan_compares += len(scan_atoms) * S * N
-        stats.per_shard_scan_compares += len(scan_atoms) * N
+        stats.scan_compares += len(scan_atoms) * S * W
+        stats.per_shard_scan_compares += len(scan_atoms) * W
         for leaf_i, start, count in scan_slices:
             leaf_masks[leaf_i] = [
                 X.scan_leaf_mask(ks, scan_atoms, vals[s], start, count)
@@ -133,13 +173,16 @@ def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
 
 def combine_shard_masks(stable: ShardedTable, plan: P.CompiledPlan,
                         leaf_masks: List[List[np.ndarray]]) -> np.ndarray:
-    """Fold the boolean tree per shard, then lift to a global row mask."""
-    N = stable.n_padded_per_shard
-    mask = np.zeros(stable.n_rows, bool)
+    """Fold the boolean tree per shard over union slots, then lift to a
+    global row mask over the full id space (`n_total`); pads and
+    tombstones drop out via `shard_slot_valid`."""
+    W = stable.shard_scan_width
+    mask = np.zeros(stable.n_total, bool)
     for s in range(stable.num_shards):
         per_leaf = [lm[s] for lm in leaf_masks]
-        m = X.combine_tree(plan.tree, per_leaf, N) & stable.shard_valid(s)
-        gids = stable.global_ids(s)
+        m = X.combine_tree(plan.tree, per_leaf, W)
+        m &= stable.shard_slot_valid(s)
+        gids = stable.shard_slot_gids(s)
         mask[gids[m]] = True
     return mask
 
@@ -151,15 +194,16 @@ def combine_shard_masks(stable: ShardedTable, plan: P.CompiledPlan,
 def _shard_candidates(ks: KeySet, stable: ShardedTable, column: str,
                       row_ids: np.ndarray, *, block: int,
                       pad_value: int) -> Tuple[Ciphertext, np.ndarray, int]:
-    """Matched rows grouped by shard, padded to `block` per shard and
-    flattened for the merge networks.  Returns (ct, ids, num_blocks)."""
-    s_idx, slots = stable.locate(row_ids)
+    """Matched rows grouped by owning shard, padded to `block` per shard
+    and flattened for the merge networks.  Returns (ct, ids, num_blocks).
+    `gather_global` resolves base slots and pending delta rows alike."""
+    s_idx = stable.shard_of(row_ids)
     num_blocks = C.next_pow2(stable.num_shards)
     per_shard = []
     for s in range(stable.num_shards):
         sel = s_idx == s
-        local = slots[sel]
-        per_shard.append((stable.gather(column, s, local), row_ids[sel]))
+        per_shard.append((stable.gather_global(column, row_ids[sel]),
+                          row_ids[sel]))
     ct, ids = M.pad_shard_blocks(ks, per_shard, block=block,
                                  pad_value=pad_value,
                                  num_blocks=num_blocks)
@@ -176,7 +220,7 @@ def order_rows_sharded(ks: KeySet, stable: ShardedTable, query: P.Query,
     if query.top_k is not None and n_sel:
         k = min(query.top_k.k, n_sel)
         kp = C.next_pow2(k)
-        counts = np.bincount(stable.locate(row_ids)[0],
+        counts = np.bincount(stable.shard_of(row_ids),
                              minlength=stable.num_shards)
         block = max(C.next_pow2(int(counts.max())), kp)
         ct, ids, nb = _shard_candidates(
@@ -196,7 +240,7 @@ def order_rows_sharded(ks: KeySet, stable: ShardedTable, query: P.Query,
         stats.order_compares += n_shard + n_merge
         row_ids = np.asarray(top)
     elif query.order_by is not None and n_sel:
-        counts = np.bincount(stable.locate(row_ids)[0],
+        counts = np.bincount(stable.shard_of(row_ids),
                              minlength=stable.num_shards)
         block = C.next_pow2(int(counts.max()))
         ct, ids, nb = _shard_candidates(

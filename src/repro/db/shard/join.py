@@ -102,12 +102,15 @@ def sharded_pair_eval(ks: KeySet, left: ShardedTable, right: ShardedTable,
 
 def _shard_masks(stable: ShardedTable, gmask: np.ndarray) -> List[np.ndarray]:
     """Global [n_rows] row mask -> per-shard [N_sp] padded masks (pad
-    slots False)."""
+    slots False).  Reads the slot->id map, so compacted tables — whose
+    shard ownership is no longer contiguous in id space — slice
+    correctly."""
     out = []
     for s in range(stable.num_shards):
         m = np.zeros(stable.n_padded_per_shard, bool)
-        lo, hi = int(stable.offsets[s]), int(stable.offsets[s + 1])
-        m[:hi - lo] = gmask[lo:hi]
+        gids = stable.global_ids(s)
+        sel = gids >= 0
+        m[sel] = gmask[gids[sel]]
         out.append(m)
     return out
 
@@ -126,8 +129,8 @@ def pairs_from_shard_grid(vals: np.ndarray, tau: int, left: ShardedTable,
             sub &= lmasks[sl][:, None] & rmasks[sr][None, :]
             idx = np.argwhere(sub)
             if idx.size:
-                idx[:, 0] += int(left.offsets[sl])
-                idx[:, 1] += int(right.offsets[sr])
+                idx[:, 0] = left.global_ids(sl)[idx[:, 0]]
+                idx[:, 1] = right.global_ids(sr)[idx[:, 1]]
                 chunks.append(idx)
     if not chunks:
         return np.zeros((0, 2), dtype=np.int64)
@@ -141,9 +144,17 @@ def _side_mask_sharded(ks: KeySet, stable: ShardedTable,
                        engine: str,
                        stats: SX.ShardedExecStats) -> np.ndarray:
     """One join side -> its GLOBAL [n_rows] row mask, through the sharded
-    filter / merge-order machinery (mirrors `db.join._side_mask`)."""
+    filter / merge-order machinery (mirrors `db.join._side_mask`,
+    including its contract for mutated sides: a pending delta run is
+    refused — compact first — while tombstoned rows just drop out of
+    the mask)."""
+    if stable.has_delta:
+        raise ValueError(
+            f"sharded table {stable.name!r} has {stable.n_delta} "
+            "uncompacted delta rows — joins address base slots; run "
+            "repro.db.delta.compact first")
     if plan is None:
-        return np.ones(stable.n_rows, bool)
+        return stable.alive.copy()
     leaf_masks = SX.sharded_filter_masks(ks, stable, plan, indexes=indexes,
                                          engine=engine, stats=stats)
     mask = SX.combine_shard_masks(stable, plan, leaf_masks)
@@ -168,7 +179,9 @@ def _shard_runs(ks: KeySet, stable: ShardedTable, column: str,
     runs = []
     for s, ix in enumerate(index.shards):
         ct, perm = ix.sorted_run()
-        runs.append((ct, id_base + int(stable.offsets[s]) + perm))
+        # per-shard perms are LOCAL slots; the slot->id map lifts them to
+        # global ids (contiguous-offset arithmetic breaks after compaction)
+        runs.append((ct, id_base + stable.global_ids(s)[perm]))
     return runs
 
 

@@ -16,6 +16,14 @@ single vectorized sweep —
 So K clients querying an S-shard table still cost one fused filter
 launch + one lane-batched search per indexed column per batch — the
 shard dim rides inside the launches instead of multiplying them.
+
+MUTATIONS interleave exactly as on the single-table server
+(`query_serve.QueryServer`): same-kind runs drain in submit order,
+query batches answer over base ∪ delta (the shard-parallel scan widens
+by the delta block; the fan-out searches add one per-delta-run search
+per column per shard holding pending rows), and `compact()` /
+`compact_threshold` retire deltas cooperatively between batches through
+the per-shard merge networks.
 """
 from __future__ import annotations
 
@@ -30,6 +38,7 @@ from repro.core.keys import KeySet
 from repro.db import executor as X
 from repro.db import plan as P
 from repro.db.index import _stack_cts
+from repro.db.query_serve import MutationResult, _QueuedMutation
 from repro.db.shard import executor as SX
 from repro.db.shard.index import ShardedIndex
 from repro.db.shard.table import ShardedTable
@@ -46,6 +55,7 @@ class ShardedBatchStats:
     scan_compares: int = 0
     per_shard_scan_compares: int = 0
     index_compares: int = 0
+    delta_build_compares: int = 0
     merge_compares: int = 0
     wall_s: float = 0.0
 
@@ -55,15 +65,18 @@ class ShardedQueryServer:
 
     def __init__(self, ks: KeySet, stable: ShardedTable, *,
                  indexes: Optional[Dict[str, ShardedIndex]] = None,
-                 batch: int = 4, engine: str = "jnp"):
+                 batch: int = 4, engine: str = "jnp",
+                 compact_threshold: Optional[int] = None):
         self.ks = ks
         self.stable = stable
         self.indexes = indexes or {}
         self.batch = int(batch)
         self.engine = engine
+        self.compact_threshold = compact_threshold
         self._queue: List[Tuple[int, P.Query]] = []
         self._next_id = 0
         self.batch_log: List[ShardedBatchStats] = []
+        self.compaction_log: list = []
 
     # -- queue -------------------------------------------------------------
 
@@ -76,14 +89,80 @@ class ShardedQueryServer:
         self._queue.append((qid, query))
         return qid
 
+    def submit_insert(self, data, key) -> int:
+        """Enqueue an insert (routed to the least-loaded shards' delta
+        runs); resolves to a `MutationResult` with the new global ids."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation("insert", data=data,
+                                                 key=key)))
+        return qid
+
+    def submit_delete(self, rows) -> int:
+        """Enqueue a tombstone of global row ids; resolves to a
+        `MutationResult` with the newly-dead count."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation(
+            "delete", rows=np.asarray(rows, np.int64))))
+        return qid
+
+    def submit_update(self, rows, data, key) -> int:
+        """Enqueue an update (tombstone + re-insert); resolves to a
+        `MutationResult` with the replacement global ids."""
+        qid = self._next_id
+        self._next_id += 1
+        self._queue.append((qid, _QueuedMutation(
+            "update", rows=np.asarray(rows, np.int64), data=data, key=key)))
+        return qid
+
     def run(self) -> Dict[int, X.QueryResult]:
-        """Drain the queue in batches; returns {request id: result}."""
+        """Drain the queue in submit order: maximal same-kind runs —
+        query runs in shared-launch batches, mutation runs sequentially
+        (reads observe exactly the writes submitted before them), with
+        `compact_threshold` optionally triggering a cooperative
+        compaction after a mutation run."""
         results: Dict[int, X.QueryResult] = {}
         while self._queue:
-            chunk, self._queue = (self._queue[:self.batch],
-                                  self._queue[self.batch:])
-            results.update(self._run_batch(chunk))
+            is_mut = isinstance(self._queue[0][1], _QueuedMutation)
+            n = 1
+            while (n < len(self._queue) and isinstance(
+                    self._queue[n][1], _QueuedMutation) == is_mut):
+                n += 1
+            chunk, self._queue = self._queue[:n], self._queue[n:]
+            if is_mut:
+                for qid, m in chunk:
+                    results[qid] = self._apply_mutation(m)
+                if (self.compact_threshold is not None
+                        and self.stable.n_delta >= self.compact_threshold):
+                    self.compact()
+            else:
+                for i in range(0, len(chunk), self.batch):
+                    results.update(self._run_batch(chunk[i:i + self.batch]))
         return results
+
+    # -- mutations ---------------------------------------------------------
+
+    def _apply_mutation(self, m: _QueuedMutation) -> MutationResult:
+        stable = self.stable
+        deleted = 0
+        if m.rows is not None:
+            deleted = stable.delete(m.rows)
+        row_ids = np.zeros(0, np.int64)
+        if m.data is not None:
+            row_ids = stable.insert(self.ks, m.data, m.key)
+        return MutationResult(m.kind, row_ids, deleted=deleted)
+
+    def compact(self):
+        """Retire all shards' pending delta runs between batches: per
+        shard, fold delta onto base and merge the (base run, delta run)
+        pair of every served `ShardedIndex` through the log-depth merge
+        network.  Returns the `CompactionStats` (also appended to
+        `compaction_log`)."""
+        from repro.db.delta import compact as _compact
+        stats = _compact(self.ks, self.stable, self.indexes)
+        self.compaction_log.append(stats)
+        return stats
 
     # -- batch execution ---------------------------------------------------
 
@@ -92,6 +171,7 @@ class ShardedQueryServer:
         t0 = time.perf_counter()
         ks, stable = self.ks, self.stable
         S, N = stable.num_shards, stable.n_padded_per_shard
+        W = stable.shard_scan_width   # base block ∪ pending delta block
         plans = [(qid, P.compile_plan(q)) for qid, q in chunk]
         bstats = ShardedBatchStats(queries=len(chunk), shards=S)
 
@@ -128,32 +208,50 @@ class ShardedQueryServer:
                   for _ in plans]
 
         # ONE fan-out search per indexed column: all queries' boundary
-        # lanes against all shards' indexes together ([S, 2K] probe grid)
+        # lanes against all shards' indexes together ([S, 2K] probe
+        # grid); every shard holding a pending delta run adds ONE more
+        # lane-batched search against its own per-run index
         for column, cts in lane_cts.items():
             idx = self.indexes[column]
+            lanes = _stack_cts(cts)
+            strict = np.asarray(lane_strict[column])
+            taus = np.asarray(lane_taus[column], np.int64)
             before = idx.search_compares
-            pos = idx.search(ks, _stack_cts(cts),
-                             np.asarray(lane_strict[column]),
-                             np.asarray(lane_taus[column], np.int64))
+            pos = idx.search(ks, lanes, strict, taus)
             bstats.index_compares += idx.search_compares - before
+            dsearch = {}
+            for s in range(S):
+                didx = SX.shard_delta_probe_index(ks, stable, column, s,
+                                                  bstats)
+                if didx is None:
+                    continue
+                before = didx.search_compares
+                dsearch[s] = (didx, didx.search(ks, lanes, strict, taus))
+                bstats.index_compares += didx.search_compares - before
             for j, (pi, li) in enumerate(lane_ref[column]):
-                leaf_masks[pi][li] = idx.lane_masks(pos, j, N)
+                masks = idx.lane_masks(pos, j, W)
+                for s, (didx, dpos) in dsearch.items():
+                    dl, dr = int(dpos[2 * j]), int(dpos[2 * j + 1])
+                    masks[s][N + np.asarray(didx.perm[dl:dr],
+                                            np.int64)] = True
+                leaf_masks[pi][li] = masks
                 qstats[pi].indexed_leaves += 1
 
         # ONE shard-parallel fused Eval for every scan atom in the batch
+        # (over the union scan width — base blocks AND delta runs)
         if scan_atoms:
             vals = SX.sharded_fused_eval(ks, stable, scan_atoms,
                                          engine=self.engine)
             bstats.eval_calls += 1
-            bstats.scan_compares += len(scan_atoms) * S * N
-            bstats.per_shard_scan_compares += len(scan_atoms) * N
+            bstats.scan_compares += len(scan_atoms) * S * W
+            bstats.per_shard_scan_compares += len(scan_atoms) * W
             for pi, li, start, count in scan_ref:
                 leaf_masks[pi][li] = [
                     X.scan_leaf_mask(ks, scan_atoms, vals[s], start, count)
                     for s in range(S)]
                 qstats[pi].scan_leaves += 1
-                qstats[pi].scan_compares += count * S * N
-                qstats[pi].per_shard_scan_compares += count * N
+                qstats[pi].scan_compares += count * S * W
+                qstats[pi].per_shard_scan_compares += count * W
                 qstats[pi].eval_calls = 1
 
         # per-query combine + merge-order/limit/project

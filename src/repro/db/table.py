@@ -10,9 +10,30 @@ row count reveals the split.
 
 Encryption is batched: one `encrypt` call per column, regardless of row
 count (the vectorized LPR path in core/encrypt.py).
+
+WRITE PATH.  A table is mutable through `insert` / `update` / `delete`:
+
+  * `insert` encrypts the new rows into a small DELTA RUN — a plain
+    pow2-padded `Table` hanging off the base (`self.delta`).  Appending
+    to an existing run concatenates ciphertext rows and re-pads; base
+    rows are NEVER re-encrypted.  New rows take global ids past the end
+    of the current id space, so ids are stable across later compaction.
+  * `delete` records a host-side TOMBSTONE over global row ids (the
+    comparison outcomes are host-visible anyway, so hiding liveness
+    would not change the threat model); tombstoned rows stay encrypted
+    in place and every read path masks them out.
+  * `update` is tombstone + re-insert (the delta-store identity).
+
+Readers answer over base ∪ delta: the SCAN VIEW (`scan_column`,
+`slot_valid`, `slot_global_ids`) presents the base block and the delta
+block as one concatenated slot space so a fused filter launch covers
+both in a single raw-eval program.  `repro.db.delta.compact` folds the
+delta run back into the base (and merges it into any `SortedIndex`
+through the log-depth merge network) — see that module.
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Iterable, Optional
 
 import jax
@@ -24,6 +45,11 @@ from repro.core.compare import next_pow2
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
 
+# pad rows appended by ciphertext-level concat/re-pad (delta growth,
+# compaction) encrypt 0 under keys folded from this seed — same
+# public-key construction as `ShardedTable.from_table`'s 0x5AAD pads
+_APPEND_PAD_SEED = 0xDE17A
+
 
 def rows_to_mask(rows, n_padded: int) -> np.ndarray:
     """Row-id list -> [n_padded] bool mask (shared by index + executor +
@@ -31,6 +57,14 @@ def rows_to_mask(rows, n_padded: int) -> np.ndarray:
     mask = np.zeros(n_padded, bool)
     mask[np.asarray(rows, dtype=np.int64)] = True
     return mask
+
+
+def column_key(key: jax.Array, cname: str) -> jax.Array:
+    """Per-column encryption key: fold in crc32 of the column NAME, not
+    its dict position — a delta run presenting the same columns in a
+    different order must encrypt under the same per-column streams as
+    the base ingest (same determinism rationale as dataset seeding)."""
+    return jax.random.fold_in(key, zlib.crc32(cname.encode()))
 
 
 def pad_rows_pow2(arr: np.ndarray, *, n_target: Optional[int] = None,
@@ -45,11 +79,13 @@ def pad_rows_pow2(arr: np.ndarray, *, n_target: Optional[int] = None,
     ingest padding and sort-network padding can never disagree about the
     padded shape; the pad VALUE here is 0 (excluded via the validity
     mask), while the sort networks pad with in-headroom sentinels.
+    An EMPTY column pads to the minimum block of one slot
+    (`next_pow2(0) == 1`) — empty tables are representable.
     """
     arr = np.asarray(arr)
     n_rows = arr.shape[0]
     n_padded = next_pow2(n_rows) if n_target is None else int(n_target)
-    if n_padded < n_rows or n_padded != next_pow2(n_padded):
+    if n_padded < max(n_rows, 1) or n_padded != next_pow2(n_padded):
         raise ValueError(
             f"n_target {n_padded} must be a power of two >= {n_rows}")
     is_float = np.issubdtype(arr.dtype, np.floating)
@@ -59,8 +95,24 @@ def pad_rows_pow2(arr: np.ndarray, *, n_target: Optional[int] = None,
     return padded
 
 
+def concat_ct_rows(*cts: Ciphertext) -> Ciphertext:
+    """Concatenate ciphertext row stacks along the leading (row) dim —
+    the ciphertext-level append used by delta growth, compaction and the
+    union scan view.  Pure slicing/stacking of existing encryptions."""
+    return Ciphertext(jnp.concatenate([ct.c0 for ct in cts]),
+                      jnp.concatenate([ct.c1 for ct in cts]))
+
+
+def _zero_pad_rows(ks: KeySet, cname: str, n_pad: int,
+                   salt: int) -> Ciphertext:
+    """`n_pad` fresh public-key encryptions of 0 (append-path padding)."""
+    key = jax.random.fold_in(column_key(jax.random.PRNGKey(_APPEND_PAD_SEED),
+                                        cname), salt)
+    return E.encrypt(ks, jnp.zeros(n_pad, jnp.int64), key)
+
+
 class Table:
-    """Named encrypted columns + row-count bookkeeping."""
+    """Named encrypted columns + row-count bookkeeping + delta-run state."""
 
     def __init__(self, name: str, columns: Dict[str, Ciphertext],
                  n_rows: int):
@@ -70,13 +122,21 @@ class Table:
         n_padded = next(iter(shapes.values()))
         if any(v != n_padded for v in shapes.values()):
             raise ValueError(f"ragged columns: {shapes}")
-        if n_padded & (n_padded - 1):
+        if n_padded < 1 or n_padded & (n_padded - 1):
             raise ValueError(f"padded row count {n_padded} not a power of two")
-        if not (0 < n_rows <= n_padded):
-            raise ValueError(f"n_rows {n_rows} outside (0, {n_padded}]")
+        # n_rows == 0 is legal: an empty table is one all-pad block (the
+        # write path starts from `Table.empty` and freshly-compacted
+        # delta runs are empty) — the invariant is 0 <= n_rows <= padded
+        if not (0 <= n_rows <= n_padded):
+            raise ValueError(f"n_rows {n_rows} outside [0, {n_padded}]")
         self.name = name
         self.columns = dict(columns)
         self.n_rows = int(n_rows)
+        # -- write-path state (all host-side) --------------------------
+        self.delta: Optional["Table"] = None     # pending insert run
+        self._dead = np.zeros(self.n_rows, bool)  # tombstones, global ids
+        self.version = 0                          # bumped per mutation
+        self._delta_index_cache: Dict[str, tuple] = {}
 
     # -- construction ------------------------------------------------------
 
@@ -96,7 +156,10 @@ class Table:
         encryption (Alg. 3) — note this trades away exact
         Eq/point-lookup semantics by design.  `n_padded` overrides the
         default next-power-of-two target (sharded tables pad every
-        shard to one common block size).
+        shard to one common block size).  Zero-length arrays build an
+        empty table (one all-pad block); per-column keys fold in the
+        column NAME (`column_key`), so ingest is insertion-order
+        independent.
         """
         lengths = {c: len(v) for c, v in data.items()}
         n_rows = next(iter(lengths.values()))
@@ -105,7 +168,7 @@ class Table:
         enc = E.encrypt_fae if fae else E.encrypt
         is_float = ks.params.profile.scheme == "ckks"
         columns = {}
-        for i, (cname, arr) in enumerate(data.items()):
+        for cname, arr in data.items():
             arr = np.asarray(arr)
             if (not is_float and np.issubdtype(arr.dtype, np.floating)
                     and not np.array_equal(arr, np.trunc(arr))):
@@ -117,19 +180,32 @@ class Table:
                 arr.astype(np.float64 if is_float else np.int64),
                 n_target=n_padded)
             columns[cname] = enc(ks, jnp.asarray(padded),
-                                 jax.random.fold_in(key, i))
+                                 column_key(key, cname))
         return cls(name, columns, n_rows)
+
+    @classmethod
+    def empty(cls, ks: KeySet, name: str, columns: Iterable[str],
+              key: jax.Array) -> "Table":
+        """A 0-row table over the named columns (one encrypted all-pad
+        slot each) — the write path's starting point: `insert` grows it
+        like any other table."""
+        return cls.from_arrays(ks, name,
+                               {c: np.zeros(0, np.int64) for c in columns},
+                               key)
 
     # -- geometry ----------------------------------------------------------
 
     @property
     def n_padded(self) -> int:
-        """Power-of-two padded row count (every column's leading dim)."""
+        """Power-of-two padded row count of the BASE (every base
+        column's leading dim; the delta run pads separately)."""
         return next(iter(self.columns.values())).c0.shape[0]
 
     @property
     def valid(self) -> np.ndarray:
-        """[n_padded] bool — True on data rows, False on pad rows."""
+        """[n_padded] bool — True on BASE data rows, False on pad rows
+        (delta slots and tombstones are the scan view's concern:
+        `slot_valid`)."""
         return np.arange(self.n_padded) < self.n_rows
 
     @property
@@ -138,27 +214,217 @@ class Table:
         return tuple(self.columns)
 
     def ciphertext_bytes(self) -> int:
-        """Storage footprint of all encrypted columns."""
-        return sum(ct.c0.nbytes + ct.c1.nbytes for ct in self.columns.values())
+        """Storage footprint of all encrypted columns (base + delta)."""
+        total = sum(ct.c0.nbytes + ct.c1.nbytes
+                    for ct in self.columns.values())
+        if self.delta is not None:
+            total += self.delta.ciphertext_bytes()
+        return total
+
+    # -- write path --------------------------------------------------------
+
+    @property
+    def n_delta(self) -> int:
+        """Rows currently pending in the delta run."""
+        return 0 if self.delta is None else self.delta.n_rows
+
+    @property
+    def n_total(self) -> int:
+        """Size of the global row-id space: base rows + delta rows
+        (tombstoned rows included — ids are never reused)."""
+        return self.n_rows + self.n_delta
+
+    @property
+    def has_delta(self) -> bool:
+        """True while an uncompacted delta run holds pending inserts."""
+        return self.n_delta > 0
+
+    @property
+    def alive(self) -> np.ndarray:
+        """[n_total] bool — False exactly on tombstoned global ids."""
+        return ~self._dead
+
+    @property
+    def is_mutated(self) -> bool:
+        """True if any mutation is outstanding (delta rows or
+        tombstones) — operators without union-read support (joins)
+        check this and ask for a compaction first."""
+        return self.has_delta or bool(self._dead.any())
+
+    def insert(self, ks: KeySet, data: Dict[str, np.ndarray],
+               key: jax.Array) -> np.ndarray:
+        """Append new rows to the delta run; returns their global ids.
+
+        One batched encrypt per column for the NEW rows only; growing an
+        existing run concatenates ciphertext rows and re-pads to the
+        next power of two — base rows are never touched, let alone
+        re-encrypted.
+        """
+        if set(data) != set(self.columns):
+            raise ValueError(
+                f"insert columns {sorted(data)} != table columns "
+                f"{sorted(self.columns)}")
+        new = Table.from_arrays(ks, f"{self.name}.delta", data, key)
+        start = self.n_total
+        if new.n_rows == 0:
+            return np.zeros(0, np.int64)
+        if self.delta is None:
+            self.delta = new
+        else:
+            self.delta = append_rows(ks, self.delta, new)
+        self._dead = np.concatenate(
+            [self._dead, np.zeros(new.n_rows, bool)])
+        self._invalidate()
+        return start + np.arange(new.n_rows, dtype=np.int64)
+
+    def delete(self, rows) -> int:
+        """Tombstone the given GLOBAL row ids (host-side mask; the
+        ciphertext rows stay in place and every read path excludes
+        them).  Returns the number of newly-dead rows."""
+        idx = np.asarray(rows, np.int64)
+        if idx.size and (idx.min() < 0 or idx.max() >= self.n_total):
+            raise IndexError(
+                f"row ids outside [0, {self.n_total}): {idx}")
+        newly = int((~self._dead[idx]).sum())
+        self._dead[idx] = True
+        self._invalidate()
+        return newly
+
+    def update(self, ks: KeySet, rows, data: Dict[str, np.ndarray],
+               key: jax.Array) -> np.ndarray:
+        """Replace rows: tombstone `rows`, insert their new versions
+        into the delta run (the delta-store update identity).  Returns
+        the replacement rows' global ids."""
+        self.delete(rows)
+        return self.insert(ks, data, key)
+
+    def _invalidate(self) -> None:
+        self.version += 1
+        self._delta_index_cache.clear()
+
+    # -- scan view (base ∪ delta as one slot space) ------------------------
+
+    @property
+    def scan_width(self) -> int:
+        """Width of the union scan: base block + delta block slots."""
+        return self.n_padded + (0 if self.delta is None
+                                else self.delta.n_padded)
+
+    def scan_column(self, name: str) -> Ciphertext:
+        """The named column over the UNION slot space — base block then
+        delta block, concatenated ciphertext rows (what the fused filter
+        launch scans, so base and delta ride ONE raw-eval program)."""
+        ct = self.columns[name]
+        if self.delta is None:
+            return ct
+        return concat_ct_rows(ct, self.delta.columns[name])
+
+    @property
+    def slot_global_ids(self) -> np.ndarray:
+        """[scan_width] global row id per scan slot (-1 on pad slots).
+        Base slot i -> id i; delta slot j -> id n_rows + j."""
+        ids = np.full(self.scan_width, -1, np.int64)
+        ids[:self.n_rows] = np.arange(self.n_rows)
+        if self.delta is not None:
+            d = self.delta.n_rows
+            ids[self.n_padded:self.n_padded + d] = self.n_rows + np.arange(d)
+        return ids
+
+    @property
+    def slot_valid(self) -> np.ndarray:
+        """[scan_width] bool — True on live data slots: pad slots AND
+        tombstoned rows excluded (the mask every filter result is ANDed
+        with)."""
+        gids = self.slot_global_ids
+        ok = gids >= 0
+        ok[ok] &= self.alive[gids[ok]]
+        return ok
+
+    def delta_index(self, ks: KeySet, column: str):
+        """Per-run `SortedIndex` over the CURRENT delta run, built
+        lazily and cached until the next mutation.  Index probes answer
+        base ∪ delta as base-search + this per-run binary search —
+        <= 2·ceil(log2 |delta|) extra compares per Range/Eq.  Returns
+        None when there is no pending delta."""
+        if not self.has_delta:
+            return None
+        from repro.db.index import SortedIndex   # circular at module scope
+        hit = self._delta_index_cache.get(column)
+        if hit is not None and hit[0] == self.version:
+            return hit[1]
+        idx = SortedIndex.build(ks, self.delta, column)
+        self._delta_index_cache[column] = (self.version, idx)
+        return idx
 
     # -- access ------------------------------------------------------------
 
     def column(self, name: str) -> Ciphertext:
-        """The named column's stacked ciphertext rows."""
+        """The named column's stacked BASE ciphertext rows (see
+        `scan_column` for the base ∪ delta view)."""
         return self.columns[name]
 
     def gather(self, name: str, rows: Iterable[int]) -> Ciphertext:
-        """Ciphertext rows of `name` at host-side row indices."""
+        """Ciphertext rows of `name` at GLOBAL row ids — ids past
+        `n_rows` resolve into the delta run."""
         idx = np.asarray(rows, dtype=np.int64)
         ct = self.columns[name]
-        return Ciphertext(ct.c0[idx], ct.c1[idx])
+        if self.delta is None or idx.size == 0 or (idx < self.n_rows).all():
+            return Ciphertext(ct.c0[idx], ct.c1[idx])
+        dct = self.delta.columns[name]
+        bi = np.nonzero(idx < self.n_rows)[0]
+        di = np.nonzero(idx >= self.n_rows)[0]
+        c0 = jnp.zeros((idx.size,) + ct.c0.shape[1:], ct.c0.dtype)
+        c1 = jnp.zeros((idx.size,) + ct.c1.shape[1:], ct.c1.dtype)
+        c0 = c0.at[bi].set(ct.c0[idx[bi]])
+        c1 = c1.at[bi].set(ct.c1[idx[bi]])
+        c0 = c0.at[di].set(dct.c0[idx[di] - self.n_rows])
+        c1 = c1.at[di].set(dct.c1[idx[di] - self.n_rows])
+        return Ciphertext(c0, c1)
 
     def decrypt_column(self, ks: KeySet, name: str, *,
                        include_padding: bool = False) -> np.ndarray:
-        """Client-side helper (tests / verification only — needs sk)."""
+        """Client-side helper (tests / verification only — needs sk).
+        Returns ALL rows of the global id space in id order (base rows
+        then delta rows; tombstoned rows included — filter with
+        `alive`)."""
+        if include_padding and self.delta is not None:
+            raise ValueError("include_padding only applies to an "
+                             "uncompacted-delta-free table")
         vals = np.asarray(E.decrypt(ks, self.columns[name]))
-        return vals if include_padding else vals[:self.n_rows]
+        if include_padding:
+            return vals
+        vals = vals[:self.n_rows]
+        if self.delta is not None:
+            vals = np.concatenate(
+                [vals, self.delta.decrypt_column(ks, name)])
+        return vals
 
     def __repr__(self) -> str:
         return (f"Table({self.name!r}, rows={self.n_rows}"
-                f" (padded {self.n_padded}), cols={list(self.columns)})")
+                f" (padded {self.n_padded}), cols={list(self.columns)}"
+                + (f", delta={self.n_delta}" if self.has_delta else "")
+                + (f", dead={int(self._dead.sum())}"
+                   if self._dead.any() else "") + ")")
+
+
+def append_rows(ks: KeySet, base: "Table", new: "Table") -> "Table":
+    """Ciphertext-level append: `base`'s valid rows + `new`'s valid
+    rows, re-padded to the next power of two with fresh encryptions of
+    0.  No row is re-encrypted — existing ciphertexts are sliced and
+    concatenated (the same trick as `ShardedTable.from_table`).  Used to
+    grow a delta run and to fold a delta back into the base at
+    compaction."""
+    if set(base.columns) != set(new.columns):
+        raise ValueError("column mismatch between runs")
+    n_total = base.n_rows + new.n_rows
+    n_pad = next_pow2(n_total)
+    columns = {}
+    for cname, ct in base.columns.items():
+        nct = new.columns[cname]
+        parts = [Ciphertext(ct.c0[:base.n_rows], ct.c1[:base.n_rows]),
+                 Ciphertext(nct.c0[:new.n_rows], nct.c1[:new.n_rows])]
+        if n_total < n_pad:
+            parts.append(_zero_pad_rows(ks, cname, n_pad - n_total,
+                                        salt=n_total))
+        columns[cname] = concat_ct_rows(*parts)
+    return Table(base.name, columns, n_total)
