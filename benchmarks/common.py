@@ -1,13 +1,41 @@
 """Shared benchmark harness: timing, CSV + JSON emission, profiles."""
 from __future__ import annotations
 
+import datetime
 import json
+import subprocess
 import time
 from typing import Callable, Dict, List, Tuple
 
 import jax
 
 ROWS: List[Tuple[str, float, str]] = []
+
+# Bump when the JSON document layout changes shape (pass fields,
+# meta stamps) so cross-PR diff tooling can gate on it.
+BENCH_SCHEMA_VERSION = 2
+
+
+def _git_sha() -> str:
+    """The repo's current commit sha ("unknown" outside a checkout);
+    host-side subprocess, never on any jit path."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def run_stamp() -> Dict[str, object]:
+    """The provenance stamp every BENCH document's meta carries: git
+    sha, schema version, ISO-8601 UTC timestamp (`datetime`, host-side
+    only — never inside a jit trace)."""
+    now = datetime.datetime.now(datetime.timezone.utc)
+    return {"git_sha": _git_sha(),
+            "schema_version": BENCH_SCHEMA_VERSION,
+            "timestamp": now.isoformat(timespec="seconds")}
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,
@@ -81,7 +109,7 @@ def write_json(path: str, *, meta: Dict[str, object] | None = None,
     passes) keeps the rest of the trajectory machine-comparable."""
     passes = [{"name": n, "us_per_call": round(us, 2),
                **_parse_derived(d)} for n, us, d in ROWS]
-    doc = {"meta": dict(meta or {}), "passes": passes}
+    doc = {"meta": {**run_stamp(), **(meta or {})}, "passes": passes}
     if extra:
         doc.update(extra)
     if append:

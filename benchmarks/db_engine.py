@@ -67,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, write_json
-from repro import db
+from repro import db, obs
 from repro.core import encrypt as E
 from repro.core.keys import keygen
 from repro.core.params import make_params
@@ -90,6 +90,22 @@ def _timed(fn, reps: int = 1):
     for _ in range(reps):
         out = fn()
     return (time.perf_counter() - t0) / reps, out
+
+
+def _obs_mark():
+    """Launch-accounting snapshot before a pass (None when obs is off)."""
+    return obs.bench_fields() if obs.is_enabled() else None
+
+
+def _obs_since(mark) -> str:
+    """Delta of the launch-accounting counters since `mark`, rendered as
+    derived-string fields — every BENCH pass carries its own launches,
+    compare lanes, and retrace count in the JSON trajectory."""
+    if mark is None:
+        return ""
+    now = obs.bench_fields()
+    return ("".join(f";{k}={now[k] - mark[k]}" for k in
+                    ("eval_launches", "compare_lanes", "jit_retraces")))
 
 
 def run(profile: str = "test-bfv", mode: str = "paper",
@@ -121,16 +137,43 @@ def run(profile: str = "test-bfv", mode: str = "paper",
     target = int(vals[n // 3])
     q_eq = db.Eq("v", _enc(ks, target, 3))
     lin = db.execute(ks, table, q_eq)                       # warm the scan
+    m_lin = _obs_mark()
     lin_s, lin_res = _timed(lambda: db.execute(ks, table, q_eq), reps=2)
+    d_lin = _obs_since(m_lin)
     ind = db.execute(ks, table, q_eq, indexes={"v": idx})   # warm the search
+    m_ind = _obs_mark()
     ind_s, ind_res = _timed(
         lambda: db.execute(ks, table, q_eq, indexes={"v": idx}), reps=2)
+    d_ind = _obs_since(m_ind)
     same = set(lin_res.row_ids.tolist()) == set(ind_res.row_ids.tolist())
     emit(f"{tag}.point.linear", lin_s * 1e6,
-         f"compares={lin_res.stats.filter_compares}")
+         f"compares={lin_res.stats.filter_compares}{d_lin}")
     emit(f"{tag}.point.indexed", ind_s * 1e6,
          f"compares={ind_res.stats.filter_compares};"
-         f"speedup={lin_s / ind_s:.1f}x;match={same}")
+         f"speedup={lin_s / ind_s:.1f}x;match={same}{d_ind}")
+
+    # ---- tracing overhead on the indexed point path ---------------------
+    # acceptance: < 5% with obs enabled, unmeasurable disabled.  The two
+    # states are interleaved rep by rep and compared by median, so slow
+    # scheduler ticks land on both sides instead of biasing one.
+    was_on = obs.is_enabled()
+    offs, ons = [], []
+    for _ in range(8):
+        obs.disable()
+        t0 = time.perf_counter()
+        db.execute(ks, table, q_eq, indexes={"v": idx})
+        offs.append(time.perf_counter() - t0)
+        obs.enable()
+        t0 = time.perf_counter()
+        db.execute(ks, table, q_eq, indexes={"v": idx})
+        ons.append(time.perf_counter() - t0)
+    if not was_on:
+        obs.disable()
+    off_s = sorted(offs)[len(offs) // 2]
+    on_s = sorted(ons)[len(ons) // 2]
+    emit(f"{tag}.obs.overhead_indexed", (on_s - off_s) * 1e6,
+         f"traced_us={on_s * 1e6:.0f};untraced_us={off_s * 1e6:.0f};"
+         f"overhead_pct={(on_s / off_s - 1) * 100:.1f}")
 
     # ---- repeated range queries with fresh bounds -----------------------
     bounds = []
@@ -147,18 +190,22 @@ def run(profile: str = "test-bfv", mode: str = "paper",
                                     indexes=indexes).mask)
         return masks
 
+    m_rl = _obs_mark()
     lin_total, lin_masks = _timed(lambda: run_ranges(None))
+    d_rl = _obs_since(m_rl)
+    m_ri = _obs_mark()
     ind_total, ind_masks = _timed(lambda: run_ranges({"v": idx}))
+    d_ri = _obs_since(m_ri)
     exact = all(
         np.array_equal(m, (vals >= lo) & (vals <= hi)) and np.array_equal(m, mi)
         for (lo, hi, _, _), m, mi in zip(bounds, lin_masks, ind_masks))
     per_lin, per_ind = lin_total / queries, ind_total / queries
     saved = per_lin - per_ind
     break_even = build_s / saved if saved > 0 else float("inf")
-    emit(f"{tag}.range.linear", per_lin * 1e6, f"queries={queries}")
+    emit(f"{tag}.range.linear", per_lin * 1e6, f"queries={queries}{d_rl}")
     emit(f"{tag}.range.indexed", per_ind * 1e6,
          f"speedup={per_lin / per_ind:.1f}x;exact={exact};"
-         f"index_break_even_queries={break_even:.0f}")
+         f"index_break_even_queries={break_even:.0f}{d_ri}")
 
     # ---- batched serving: K queries, one fused pass ---------------------
     # steady-state comparison: warm both paths (the sequential path was
@@ -171,11 +218,13 @@ def run(profile: str = "test-bfv", mode: str = "paper",
     server.run()                                            # warm
     for _, _, ct_lo, ct_hi in bounds:
         server.submit(db.Range("v", ct_lo, ct_hi))
+    m_bat = _obs_mark()
     bat_s, _ = _timed(server.run)
+    d_bat = _obs_since(m_bat)
     emit(f"{tag}.serve.sequential", seq_s / queries * 1e6, "")
     emit(f"{tag}.serve.batched", bat_s / queries * 1e6,
          f"fused_eval_calls={server.batch_log[-1].eval_calls};"
-         f"speedup={seq_s / bat_s:.1f}x")
+         f"speedup={seq_s / bat_s:.1f}x{d_bat}")
 
     # indexed serving: K queries' binary searches ride the same probe lanes
     seq_i, _ = _timed(lambda: run_ranges({"v": idx}))
@@ -185,11 +234,13 @@ def run(profile: str = "test-bfv", mode: str = "paper",
     iserver.run()                                           # warm
     for _, _, ct_lo, ct_hi in bounds:
         iserver.submit(db.Range("v", ct_lo, ct_hi))
+    m_bi = _obs_mark()
     bat_i, _ = _timed(iserver.run)
+    d_bi = _obs_since(m_bi)
     emit(f"{tag}.serve.sequential_indexed", seq_i / queries * 1e6, "")
     emit(f"{tag}.serve.batched_indexed", bat_i / queries * 1e6,
          f"index_compares={iserver.batch_log[-1].index_compares};"
-         f"speedup={seq_i / bat_i:.1f}x")
+         f"speedup={seq_i / bat_i:.1f}x{d_bi}")
 
     # ---- e2e And(Range, Eq) + TopK on all three datasets (full rows) ----
     for name in DATASETS:
@@ -423,22 +474,26 @@ def run_join(profile: str = "test-bfv", mode: str = "paper",
     join = db.Join(None, None, on="k")
 
     db.execute_join(ks, lt, rt, join, strategy="nested")   # warm the tiles
+    m_n = _obs_mark()
     t_nest, res_n = _timed(
         lambda: db.execute_join(ks, lt, rt, join, strategy="nested"), reps=2)
+    d_n = _obs_since(m_n)
     nested_ok = bool(np.array_equal(res_n.pairs, want))
     emit(f"{tag}.nested", t_nest * 1e6,
          f"rows={n_l}x{n_r};pairs={len(res_n)};"
          f"compares={res_n.stats.join_compares};"
-         f"evals={res_n.stats.eval_calls};exact={nested_ok}")
+         f"evals={res_n.stats.eval_calls};exact={nested_ok}{d_n}")
 
     t0 = time.perf_counter()
     li = {"k": db.SortedIndex.build(ks, lt, "k")}
     ri = {"k": db.SortedIndex.build(ks, rt, "k")}
     build_s = time.perf_counter() - t0
     db.execute_join(ks, lt, rt, join, left_indexes=li, right_indexes=ri)
+    m_sm = _obs_mark()
     t_sm, res_s = _timed(
         lambda: db.execute_join(ks, lt, rt, join, left_indexes=li,
                                 right_indexes=ri), reps=2)
+    d_sm = _obs_since(m_sm)
     sm_ok = bool(np.array_equal(res_s.pairs, want))
     ratio = res_n.stats.join_compares / max(1, res_s.stats.join_compares)
     emit(f"{tag}.sort_merge", t_sm * 1e6,
@@ -446,7 +501,7 @@ def run_join(profile: str = "test-bfv", mode: str = "paper",
          f"merge={res_s.stats.merge_compares};"
          f"adjacency={res_s.stats.adjacency_compares};"
          f"index_build_s={build_s:.3f};exact={sm_ok};"
-         f"compare_ratio={ratio:.1f};speedup={t_nest / t_sm:.1f}x")
+         f"compare_ratio={ratio:.1f};speedup={t_nest / t_sm:.1f}x{d_sm}")
 
     # the acceptance criteria, enforced where they are produced: CI runs
     # this pass, so a strategy regression fails loudly instead of just
@@ -662,6 +717,10 @@ if __name__ == "__main__":
                     help="merge passes into an existing json trajectory "
                          "instead of replacing it (partial re-runs)")
     args = ap.parse_args()
+    # launch accounting on for the whole run: every pass's derived fields
+    # carry its eval_launches / compare_lanes / jit_retraces share, and
+    # the document gets one obs section with the totals
+    obs.enable()
     base = run(profile=args.profile, mode=args.mode, rows=args.rows,
                queries=args.queries)
     sharded_summary = None
@@ -685,8 +744,10 @@ if __name__ == "__main__":
                    meta={"benchmark": "db_engine", "profile": args.profile,
                          "mode": args.mode, "rows_arg": args.rows,
                          "backend": jax.default_backend(),
-                         "devices": jax.device_count()},
+                         "devices": jax.device_count(),
+                         **obs.bench_fields()},
                    extra={"sharded": sharded_summary,
                           "join": join_summary,
-                          "write": write_summary},
+                          "write": write_summary,
+                          "obs": obs.metrics_dump()},
                    append=args.append)

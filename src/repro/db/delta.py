@@ -42,6 +42,7 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
@@ -94,12 +95,14 @@ def merge_index_runs(ks: KeySet, base: SortedIndex, delta: SortedIndex,
                            delta.perm + id_offset,
                            build_compares=carried), 0
     L = C.next_pow2(max(base.n_rows, delta.n_rows))
-    ct, ids = M.pad_shard_blocks(
-        ks, [(base.sorted_ct, base.perm),
-             (delta.sorted_ct, delta.perm + id_offset)],
-        block=L, pad_value=ks.params.max_operand // 2, num_blocks=2)
-    c0, c1, gid, compares = M.merge_sorted_runs(
-        ks, jitted_comparator(ks), ct.c0, ct.c1, jnp.asarray(ids), run=L)
+    with obs.span("compact.merge_index", column=base.column, block=L):
+        ct, ids = M.pad_shard_blocks(
+            ks, [(base.sorted_ct, base.perm),
+                 (delta.sorted_ct, delta.perm + id_offset)],
+            block=L, pad_value=ks.params.max_operand // 2, num_blocks=2)
+        c0, c1, gid, compares = M.merge_sorted_runs(
+            ks, jitted_comparator(ks), ct.c0, ct.c1, jnp.asarray(ids),
+            run=L)
     gid = np.asarray(gid)
     keep = np.nonzero(gid >= 0)[0]
     merged = SortedIndex(base.column, Ciphertext(c0[keep], c1[keep]),
@@ -116,26 +119,32 @@ def compact(ks: KeySet, table, indexes: Optional[Dict] = None,
     `ShardedTable`; a no-op (zero stats) when nothing is pending."""
     shard_mod = sys.modules.get("repro.db.shard.table")
     if shard_mod is not None and isinstance(table, shard_mod.ShardedTable):
-        return _compact_sharded(ks, table, indexes)
+        with obs.span("compact", shards=table.num_shards,
+                      n_delta=table.n_delta):
+            stats = _compact_sharded(ks, table, indexes)
+        obs.absorb_compaction_stats(stats)
+        return stats
     indexes = indexes if indexes is not None else {}
     stats = CompactionStats(n_base=table.n_rows, n_delta=table.n_delta)
     if not table.has_delta:
         return stats
-    n_new = table.n_rows + table.n_delta
-    for col in list(indexes):
-        didx = table.delta_index(ks, col)
-        merged, compares = merge_index_runs(ks, indexes[col], didx,
-                                            id_offset=table.n_rows)
-        indexes[col] = merged
-        stats.merge_compares += compares
-        stats.merge_rounds += 1
-        stats.indexes_merged += 1
-        stats.rebuild_compares += C.bitonic_compare_count(n_new)
-    folded = append_rows(ks, table, table.delta)
-    table.columns = folded.columns
-    table.n_rows = folded.n_rows
-    table.delta = None
-    table._invalidate()
+    with obs.span("compact", n_base=table.n_rows, n_delta=table.n_delta):
+        n_new = table.n_rows + table.n_delta
+        for col in list(indexes):
+            didx = table.delta_index(ks, col)
+            merged, compares = merge_index_runs(ks, indexes[col], didx,
+                                                id_offset=table.n_rows)
+            indexes[col] = merged
+            stats.merge_compares += compares
+            stats.merge_rounds += 1
+            stats.indexes_merged += 1
+            stats.rebuild_compares += C.bitonic_compare_count(n_new)
+        folded = append_rows(ks, table, table.delta)
+        table.columns = folded.columns
+        table.n_rows = folded.n_rows
+        table.delta = None
+        table._invalidate()
+    obs.absorb_compaction_stats(stats)
     return stats
 
 

@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.ckks import eps_to_tau
 from repro.core.encrypt import Ciphertext
@@ -133,24 +134,31 @@ def fused_eval(ks: KeySet, table: Table, atoms: List[P.Atom], *,
     own τ (profile default or ε-derived) host-side in `scan_leaf_mask`,
     so a plan mixing exact and ε-band predicates still runs one launch.
     """
-    cols = {a.column: table.scan_column(a.column) for a in atoms}
-    col = Ciphertext(
-        jnp.stack([cols[a.column].c0 for a in atoms]),
-        jnp.stack([cols[a.column].c1 for a in atoms]))
-    bounds = Ciphertext(
-        jnp.stack([a.value.c0 for a in atoms])[:, None],
-        jnp.stack([a.value.c1 for a in atoms])[:, None])
-    if _use_kernel(engine):
-        from repro.kernels import ops as KO
-        A, N = col.c0.shape[0], col.c0.shape[1]
-        flat = Ciphertext(col.c0.reshape((A * N,) + col.c0.shape[2:]),
-                          col.c1.reshape((A * N,) + col.c1.shape[2:]))
-        b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
-        b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
-        bflat = Ciphertext(b0.reshape(flat.c0.shape), b1.reshape(flat.c1.shape))
-        out = KO.eval_values(ks, flat, bflat)
-        return np.asarray(out).reshape(A, N)
-    return np.asarray(jitted_eval(ks)(col, bounds))
+    with obs.span("executor.fused_eval", atoms=len(atoms),
+                  rows=table.scan_width) as sp:
+        cols = {a.column: table.scan_column(a.column) for a in atoms}
+        col = Ciphertext(
+            jnp.stack([cols[a.column].c0 for a in atoms]),
+            jnp.stack([cols[a.column].c1 for a in atoms]))
+        bounds = Ciphertext(
+            jnp.stack([a.value.c0 for a in atoms])[:, None],
+            jnp.stack([a.value.c1 for a in atoms])[:, None])
+        obs.jit_launch("executor.fused_eval", col.c0, bounds.c0)
+        obs.count("eval.launches")
+        obs.count("eval.lanes", col.c0.shape[0] * col.c0.shape[1])
+        obs.count("bytes.moved", 2 * (col.c0.nbytes + bounds.c0.nbytes))
+        if _use_kernel(engine):
+            from repro.kernels import ops as KO
+            A, N = col.c0.shape[0], col.c0.shape[1]
+            flat = Ciphertext(col.c0.reshape((A * N,) + col.c0.shape[2:]),
+                              col.c1.reshape((A * N,) + col.c1.shape[2:]))
+            b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
+            b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
+            bflat = Ciphertext(b0.reshape(flat.c0.shape),
+                               b1.reshape(flat.c1.shape))
+            out = sp.sync(KO.eval_values(ks, flat, bflat))
+            return np.asarray(out).reshape(A, N)
+        return np.asarray(sp.sync(jitted_eval(ks)(col, bounds)))
 
 
 def fused_compare(ks: KeySet, table: Table, atoms: List[P.Atom], *,
@@ -222,11 +230,15 @@ def delta_probe_index(ks: KeySet, table: Table, column: str,
     """The per-delta-run `SortedIndex` for an indexed union probe, with
     lazy-build compares attributed to `stats` exactly once per delta
     state (shared by executor and QueryServer).  None without a delta."""
+    if table.n_delta == 0:
+        return table.delta_index(ks, column)   # fast path: None, no span
     cached = table._delta_index_cache.get(column)
     fresh = not (cached is not None and cached[0] == table.version)
-    didx = table.delta_index(ks, column)
+    with obs.span("delta.index_build", column=column, fresh=fresh):
+        didx = table.delta_index(ks, column)
     if didx is not None and fresh:
         stats.delta_build_compares += didx.build_compares
+        obs.count("eval.lanes", didx.build_compares)
     return didx
 
 
@@ -298,17 +310,21 @@ def order_rows(ks: KeySet, table: Table, query: P.Query,
     n_sel = int(row_ids.shape[0])
     if query.top_k is not None and n_sel:
         k = min(query.top_k.k, n_sel)
-        sub = table.gather(query.top_k.column, row_ids)
-        _, sel = C.encrypted_topk(ks, sub, k, jitted_comparator(ks))
+        with obs.span("executor.order", kind="topk", rows=n_sel, k=k):
+            sub = table.gather(query.top_k.column, row_ids)
+            _, sel = C.encrypted_topk(ks, sub, k, jitted_comparator(ks))
         row_ids = row_ids[np.asarray(sel)]
         stats.order_compares += _topk_compares(n_sel, k)
+        obs.count("eval.lanes", _topk_compares(n_sel, k))
     elif query.order_by is not None and n_sel:
-        sub = table.gather(query.order_by.column, row_ids)
-        _, perm = C.encrypted_sort(ks, sub, jitted_comparator(ks))
+        with obs.span("executor.order", kind="sort", rows=n_sel):
+            sub = table.gather(query.order_by.column, row_ids)
+            _, perm = C.encrypted_sort(ks, sub, jitted_comparator(ks))
         row_ids = row_ids[np.asarray(perm)]
         if query.order_by.descending:
             row_ids = row_ids[::-1]
         stats.order_compares += _sort_compares(n_sel)
+        obs.count("eval.lanes", _sort_compares(n_sel))
     limit = query.limit_count
     if limit is not None:
         row_ids = row_ids[:limit]
@@ -357,13 +373,17 @@ def execute(ks: KeySet, table, query, *,
     else:
         raise TypeError(f"cannot execute {query!r}")
     stats = ExecStats()
-    leaf_masks = filter_masks(ks, table, plan, indexes=indexes,
-                              engine=engine, stats=stats)
-    slot_mask = combine_tree(plan.tree, leaf_masks, table.scan_width)
-    slot_mask &= table.slot_valid          # pads AND tombstones excluded
-    row_ids = table.slot_global_ids[np.nonzero(slot_mask)[0]]
-    mask = rows_to_mask(row_ids, table.n_total)    # [n_total] global mask
-    row_ids = order_rows(ks, table, plan.query, row_ids, stats)
-    columns = {c: table.gather(c, row_ids) for c in plan.query.select}
+    with obs.span("executor.execute", leaves=plan.num_leaves):
+        leaf_masks = filter_masks(ks, table, plan, indexes=indexes,
+                                  engine=engine, stats=stats)
+        slot_mask = combine_tree(plan.tree, leaf_masks, table.scan_width)
+        slot_mask &= table.slot_valid      # pads AND tombstones excluded
+        row_ids = table.slot_global_ids[np.nonzero(slot_mask)[0]]
+        mask = rows_to_mask(row_ids, table.n_total)  # [n_total] global mask
+        row_ids = order_rows(ks, table, plan.query, row_ids, stats)
+        columns = {c: table.gather(c, row_ids) for c in plan.query.select}
+    if obs.is_enabled() and table.n_rows:
+        obs.observe("pad.waste", table.n_padded / table.n_rows)
+        obs.absorb_exec_stats(stats)
     return QueryResult(row_ids=row_ids, mask=mask,
                        columns=columns, stats=stats)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.ckks import eps_to_tau
 from repro.core.encrypt import Ciphertext
@@ -128,18 +129,25 @@ class SortedIndex:
         lo = np.zeros(B, np.int64)
         hi = np.full(B, self.n_rows, np.int64)
         probes = np.zeros(B, np.int64)
-        while np.any(lo < hi):
-            active = lo < hi
-            mid = (lo + hi) // 2
-            probe = np.where(active, mid, 0)       # fixed shape; dead lanes
-            rows = Ciphertext(self.sorted_ct.c0[probe],
-                              self.sorted_ct.c1[probe])
-            v = np.asarray(ev(rows, values))                  # [B] raw
-            c = np.where(np.abs(v) < taus, 0, np.sign(v))     # per-lane τ
-            probes += active
-            go_left = np.where(strict, c > 0, c >= 0)
-            hi = np.where(active & go_left, mid, hi)
-            lo = np.where(active & ~go_left, mid + 1, lo)
+        with obs.span("index.search", column=self.column, lanes=B,
+                      rows=self.n_rows) as sp:
+            while np.any(lo < hi):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                probe = np.where(active, mid, 0)   # fixed shape; dead lanes
+                rows = Ciphertext(self.sorted_ct.c0[probe],
+                                  self.sorted_ct.c1[probe])
+                obs.jit_launch("index.probe", rows.c0, values.c0)
+                obs.count("eval.launches")
+                obs.count("eval.lanes", B)
+                v = np.asarray(ev(rows, values))              # [B] raw
+                c = np.where(np.abs(v) < taus, 0, np.sign(v))  # per-lane τ
+                probes += active
+                go_left = np.where(strict, c > 0, c >= 0)
+                hi = np.where(active & go_left, mid, hi)
+                lo = np.where(active & ~go_left, mid + 1, lo)
+            sp.set(probes=int(probes.sum()))
+        obs.count("index.probes", int(probes.sum()))
         self.search_compares += int(probes.sum())
         self.last_probe_counts = probes            # per-lane attribution
         return lo

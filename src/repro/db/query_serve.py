@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.ckks import eps_to_tau
 from repro.core.keys import KeySet
 from repro.db import executor as X
@@ -120,21 +121,41 @@ class QueryServer:
         self._next_id = 0
         self.batch_log: List[BatchStats] = []
         self.compaction_log: list = []
+        self._tenants: Dict[int, str] = {}     # request id -> tenant label
 
     # -- queue -------------------------------------------------------------
 
-    def submit(self, query) -> int:
-        """Enqueue a Query (or bare predicate); returns a request id."""
-        if isinstance(query, P.Predicate):
-            query = P.Query(where=query)
+    def _enqueue(self, item, tenant: Optional[str]) -> int:
+        """Assign the next request id, remember its tenant, enqueue."""
         qid = self._next_id
         self._next_id += 1
-        self._queue.append((qid, query))
+        if tenant is not None:
+            self._tenants[qid] = tenant
+        self._queue.append((qid, item))
         return qid
+
+    def _bill_tenant(self, qid: int, stats) -> None:
+        """Per-tenant served-query + compare-lane attribution (counted
+        only when the obs layer is enabled)."""
+        if not obs.is_enabled():
+            return
+        tenant = self._tenants.get(qid, "default")
+        obs.count("server.queries", 1, tenant=tenant)
+        compares = getattr(stats, "filter_compares",
+                           getattr(stats, "join_compares", 0))
+        obs.count("server.compares", compares, tenant=tenant)
+
+    def submit(self, query, *, tenant: Optional[str] = None) -> int:
+        """Enqueue a Query (or bare predicate); returns a request id.
+        `tenant` labels the request for per-tenant metrics attribution."""
+        if isinstance(query, P.Predicate):
+            query = P.Query(where=query)
+        return self._enqueue(query, tenant)
 
     def submit_join(self, join: P.Join, right: Table, *,
                     right_indexes: Optional[Dict[str, SortedIndex]] = None,
-                    strategy: str = "auto") -> int:
+                    strategy: str = "auto",
+                    tenant: Optional[str] = None) -> int:
         """Enqueue a Join of the server's table (left side) against
         `right`; returns a request id resolving to a `JoinResult`.
 
@@ -147,42 +168,32 @@ class QueryServer:
         sort-merge strategy.
         """
         P.compile_join(join)          # validate kind/on shape at submit time
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedJoin(join, right,
-                                             dict(right_indexes or {}),
-                                             strategy)))
-        return qid
+        return self._enqueue(_QueuedJoin(join, right,
+                                         dict(right_indexes or {}),
+                                         strategy), tenant)
 
-    def submit_insert(self, data: Dict[str, np.ndarray],
-                      key: jax.Array) -> int:
+    def submit_insert(self, data: Dict[str, np.ndarray], key: jax.Array, *,
+                      tenant: Optional[str] = None) -> int:
         """Enqueue an insert of new rows; resolves to a `MutationResult`
         carrying the rows' global ids.  Queries submitted AFTER this see
         the new rows (FIFO order survives batching)."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation("insert", data=data,
-                                                 key=key)))
-        return qid
+        return self._enqueue(_QueuedMutation("insert", data=data, key=key),
+                             tenant)
 
-    def submit_delete(self, rows) -> int:
+    def submit_delete(self, rows, *, tenant: Optional[str] = None) -> int:
         """Enqueue a tombstone of the given global row ids; resolves to
         a `MutationResult` with the newly-dead count."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation(
-            "delete", rows=np.asarray(rows, np.int64))))
-        return qid
+        return self._enqueue(_QueuedMutation(
+            "delete", rows=np.asarray(rows, np.int64)), tenant)
 
     def submit_update(self, rows, data: Dict[str, np.ndarray],
-                      key: jax.Array) -> int:
+                      key: jax.Array, *,
+                      tenant: Optional[str] = None) -> int:
         """Enqueue an update (tombstone `rows` + insert replacements);
         resolves to a `MutationResult` with the replacement global ids."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation(
-            "update", rows=np.asarray(rows, np.int64), data=data, key=key)))
-        return qid
+        return self._enqueue(_QueuedMutation(
+            "update", rows=np.asarray(rows, np.int64), data=data, key=key),
+            tenant)
 
     def run(self) -> Dict[int, X.QueryResult]:
         """Drain the queue; returns {request id: result} (a `QueryResult`
@@ -215,12 +226,13 @@ class QueryServer:
 
     def _apply_mutation(self, m: _QueuedMutation) -> MutationResult:
         table = self.table
-        deleted = 0
-        if m.rows is not None:
-            deleted = table.delete(m.rows)
-        row_ids = np.zeros(0, np.int64)
-        if m.data is not None:
-            row_ids = table.insert(self.ks, m.data, m.key)
+        with obs.span("server.mutation", kind=m.kind):
+            deleted = 0
+            if m.rows is not None:
+                deleted = table.delete(m.rows)
+            row_ids = np.zeros(0, np.int64)
+            if m.data is not None:
+                row_ids = table.insert(self.ks, m.data, m.key)
         return MutationResult(m.kind, row_ids, deleted=deleted)
 
     def compact(self):
@@ -239,6 +251,11 @@ class QueryServer:
 
     def _run_batch(self, chunk: List[Tuple[int, object]],
                    ) -> Dict[int, X.QueryResult]:
+        with obs.span("server.batch", size=len(chunk)) as bsp:
+            return self._run_batch_traced(chunk, bsp)
+
+    def _run_batch_traced(self, chunk: List[Tuple[int, object]], bsp,
+                          ) -> Dict[int, X.QueryResult]:
         t0 = time.perf_counter()
         ks, table = self.ks, self.table
         W = table.scan_width         # base block ∪ pending delta block
@@ -359,11 +376,21 @@ class QueryServer:
                        for c in plan.query.select}
             results[qid] = X.QueryResult(
                 row_ids=row_ids, mask=gmask, columns=columns, stats=stats)
+            self._bill_tenant(qid, stats)
 
         if joins:
-            results.update(self._run_joins(joins, join_slot, leaf_masks,
-                                           qstats, bstats))
+            with obs.span("server.joins", joins=len(joins)):
+                jres = self._run_joins(joins, join_slot, leaf_masks,
+                                       qstats, bstats)
+            for qid, r in jres.items():
+                self._bill_tenant(qid, r.stats)
+            results.update(jres)
         bstats.wall_s = time.perf_counter() - t0
+        bsp.set(queries=bstats.queries, joins=bstats.joins,
+                eval_calls=bstats.eval_calls)
+        obs.absorb_batch_stats(bstats)
+        if obs.is_enabled() and table.n_rows:
+            obs.observe("pad.waste", table.n_padded / table.n_rows)
         self.batch_log.append(bstats)
         return results
 

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
@@ -58,32 +59,43 @@ def sharded_fused_eval(ks: KeySet, stable: ShardedTable,
     block AND its pending delta run (`scan_stack`), so the write path
     never costs a second launch.  Thresholds are NOT applied here (same
     contract as `db.executor.fused_eval`)."""
-    cols = {a.column: stable.scan_stack(a.column) for a in atoms}
-    col = Ciphertext(
-        jnp.stack([cols[a.column].c0 for a in atoms], axis=1),
-        jnp.stack([cols[a.column].c1 for a in atoms], axis=1))
-    bounds = Ciphertext(
-        jnp.stack([a.value.c0 for a in atoms])[:, None],
-        jnp.stack([a.value.c1 for a in atoms])[:, None])
-    use_kernel = X._use_kernel(engine)
-    spec = stable.spec
-    if spec.shard_map_ok:
-        from repro.kernels import ops as KO
-        out = KO.shard_eval_values(ks, col, bounds, mesh=spec.mesh,
-                                   axis_name=spec.axis,
-                                   use_kernel=use_kernel)
-        return np.asarray(out)
-    if use_kernel:
-        from repro.kernels import ops as KO
-        S, A, N = col.c0.shape[:3]
-        flat = Ciphertext(col.c0.reshape((S * A * N,) + col.c0.shape[3:]),
-                          col.c1.reshape((S * A * N,) + col.c1.shape[3:]))
-        b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
-        b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
-        bflat = Ciphertext(b0.reshape(flat.c0.shape),
-                           b1.reshape(flat.c1.shape))
-        return np.asarray(KO.eval_values(ks, flat, bflat)).reshape(S, A, N)
-    return np.asarray(X.jitted_eval(ks)(col, bounds))
+    with obs.span("shard.fused_eval", shards=stable.num_shards,
+                  atoms=len(atoms), rows=stable.shard_scan_width) as sp:
+        cols = {a.column: stable.scan_stack(a.column) for a in atoms}
+        col = Ciphertext(
+            jnp.stack([cols[a.column].c0 for a in atoms], axis=1),
+            jnp.stack([cols[a.column].c1 for a in atoms], axis=1))
+        bounds = Ciphertext(
+            jnp.stack([a.value.c0 for a in atoms])[:, None],
+            jnp.stack([a.value.c1 for a in atoms])[:, None])
+        obs.jit_launch("shard.fused_eval", col.c0, bounds.c0)
+        obs.count("eval.launches")
+        obs.count("eval.lanes",
+                  col.c0.shape[0] * col.c0.shape[1] * col.c0.shape[2])
+        obs.count("bytes.moved", 2 * (col.c0.nbytes + bounds.c0.nbytes))
+        use_kernel = X._use_kernel(engine)
+        spec = stable.spec
+        if spec.shard_map_ok:
+            from repro.kernels import ops as KO
+            sp.set(shard_map=True)
+            out = sp.sync(KO.shard_eval_values(ks, col, bounds,
+                                               mesh=spec.mesh,
+                                               axis_name=spec.axis,
+                                               use_kernel=use_kernel))
+            return np.asarray(out)
+        if use_kernel:
+            from repro.kernels import ops as KO
+            S, A, N = col.c0.shape[:3]
+            flat = Ciphertext(
+                col.c0.reshape((S * A * N,) + col.c0.shape[3:]),
+                col.c1.reshape((S * A * N,) + col.c1.shape[3:]))
+            b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
+            b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
+            bflat = Ciphertext(b0.reshape(flat.c0.shape),
+                               b1.reshape(flat.c1.shape))
+            out = sp.sync(KO.eval_values(ks, flat, bflat))
+            return np.asarray(out).reshape(S, A, N)
+        return np.asarray(sp.sync(X.jitted_eval(ks)(col, bounds)))
 
 
 def shard_delta_probe_index(ks: KeySet, stable: ShardedTable, column: str,
@@ -220,37 +232,41 @@ def order_rows_sharded(ks: KeySet, stable: ShardedTable, query: P.Query,
     if query.top_k is not None and n_sel:
         k = min(query.top_k.k, n_sel)
         kp = C.next_pow2(k)
-        counts = np.bincount(stable.shard_of(row_ids),
-                             minlength=stable.num_shards)
-        block = max(C.next_pow2(int(counts.max())), kp)
-        ct, ids, nb = _shard_candidates(
-            ks, stable, query.top_k.column, row_ids, block=block,
-            pad_value=-(ks.params.max_operand // 2))
-        top, n_shard, n_merge = M.sharded_topk(ks, cmp, ct, ids,
-                                               num_blocks=nb, k=k)
-        if np.any(top < 0):
-            # a real row tied the sentinel and coin-flipped out — rare;
-            # re-resolve through the tie-robust sort path (id-stripped),
-            # exactly core encrypted_topk's fallback
-            sub = stable.gather_global(query.top_k.column, row_ids)
-            _, sel = C._topk_via_sort(ks, sub, k, cmp, None)
-            top = row_ids[np.asarray(sel)]
+        with obs.span("shard.order", kind="topk", rows=n_sel, k=k):
+            counts = np.bincount(stable.shard_of(row_ids),
+                                 minlength=stable.num_shards)
+            block = max(C.next_pow2(int(counts.max())), kp)
+            ct, ids, nb = _shard_candidates(
+                ks, stable, query.top_k.column, row_ids, block=block,
+                pad_value=-(ks.params.max_operand // 2))
+            top, n_shard, n_merge = M.sharded_topk(ks, cmp, ct, ids,
+                                                   num_blocks=nb, k=k)
+            if np.any(top < 0):
+                # a real row tied the sentinel and coin-flipped out —
+                # rare; re-resolve through the tie-robust sort path
+                # (id-stripped), exactly core encrypted_topk's fallback
+                sub = stable.gather_global(query.top_k.column, row_ids)
+                _, sel = C._topk_via_sort(ks, sub, k, cmp, None)
+                top = row_ids[np.asarray(sel)]
         stats.per_shard_order_compares += n_shard
         stats.merge_compares += n_merge
         stats.order_compares += n_shard + n_merge
+        obs.count("eval.lanes", n_shard + n_merge)
         row_ids = np.asarray(top)
     elif query.order_by is not None and n_sel:
-        counts = np.bincount(stable.shard_of(row_ids),
-                             minlength=stable.num_shards)
-        block = C.next_pow2(int(counts.max()))
-        ct, ids, nb = _shard_candidates(
-            ks, stable, query.order_by.column, row_ids, block=block,
-            pad_value=ks.params.max_operand // 2)
-        ordered, n_shard, n_merge = M.sharded_sort(ks, cmp, ct, ids,
-                                                   num_blocks=nb)
+        with obs.span("shard.order", kind="sort", rows=n_sel):
+            counts = np.bincount(stable.shard_of(row_ids),
+                                 minlength=stable.num_shards)
+            block = C.next_pow2(int(counts.max()))
+            ct, ids, nb = _shard_candidates(
+                ks, stable, query.order_by.column, row_ids, block=block,
+                pad_value=ks.params.max_operand // 2)
+            ordered, n_shard, n_merge = M.sharded_sort(ks, cmp, ct, ids,
+                                                       num_blocks=nb)
         stats.per_shard_order_compares += n_shard
         stats.merge_compares += n_merge
         stats.order_compares += n_shard + n_merge
+        obs.count("eval.lanes", n_shard + n_merge)
         row_ids = ordered[::-1] if query.order_by.descending else ordered
     limit = query.limit_count
     if limit is not None:
@@ -271,12 +287,19 @@ def execute_sharded(ks: KeySet, stable: ShardedTable, query, *,
         raise TypeError(f"cannot execute {query!r}")
     stats = ShardedExecStats(shards=stable.num_shards,
                              mesh_devices=stable.spec.mesh_devices)
-    leaf_masks = sharded_filter_masks(ks, stable, plan, indexes=indexes,
-                                      engine=engine, stats=stats)
-    mask = combine_shard_masks(stable, plan, leaf_masks)
-    row_ids = np.nonzero(mask)[0]
-    row_ids = order_rows_sharded(ks, stable, plan.query, row_ids, stats)
-    columns = {c: stable.gather_global(c, row_ids)
-               for c in plan.query.select}
+    with obs.span("shard.execute", shards=stable.num_shards,
+                  leaves=plan.num_leaves):
+        leaf_masks = sharded_filter_masks(ks, stable, plan, indexes=indexes,
+                                          engine=engine, stats=stats)
+        mask = combine_shard_masks(stable, plan, leaf_masks)
+        row_ids = np.nonzero(mask)[0]
+        row_ids = order_rows_sharded(ks, stable, plan.query, row_ids, stats)
+        columns = {c: stable.gather_global(c, row_ids)
+                   for c in plan.query.select}
+    if obs.is_enabled() and stable.n_rows:
+        obs.observe("pad.waste",
+                    stable.num_shards * stable.n_padded_per_shard
+                    / stable.n_rows)
+        obs.absorb_exec_stats(stats)
     return X.QueryResult(row_ids=row_ids, mask=mask, columns=columns,
                          stats=stats)

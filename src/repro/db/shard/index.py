@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
@@ -41,6 +42,10 @@ class ShardedIndex:
         self.counts = np.asarray([ix.n_rows for ix in shards], np.int64)
         self.build_compares = build_compares
         self.search_compares = 0
+        # per-lane probe totals (summed over shards) from the LAST
+        # `search` call — the per-query attribution the batched servers
+        # bill from (the scalar above is only the cumulative total)
+        self.last_probe_counts = np.zeros(0, np.int64)
         n_max = int(self.counts.max())
         c0s, c1s = [], []
         for ix in shards:
@@ -123,20 +128,28 @@ class ShardedIndex:
         lo = np.zeros((S, B), np.int64)
         hi = np.broadcast_to(self.counts[:, None], (S, B)).copy()
         s_idx = np.arange(S)[:, None]
-        probes = 0
-        while np.any(lo < hi):
-            active = lo < hi
-            mid = (lo + hi) // 2
-            probe = np.where(active, mid, 0)
-            rows = Ciphertext(self._sorted.c0[s_idx, probe],
-                              self._sorted.c1[s_idx, probe])   # [S, B, ...]
-            v = np.asarray(ev(rows, values))                   # [S, B] raw
-            c = np.where(np.abs(v) < taus[None, :], 0, np.sign(v))
-            probes += int(active.sum())
-            go_left = np.where(strict[None, :], c > 0, c >= 0)
-            hi = np.where(active & go_left, mid, hi)
-            lo = np.where(active & ~go_left, mid + 1, lo)
-        self.search_compares += probes
+        lane_probes = np.zeros(B, np.int64)
+        with obs.span("shard.index.search", column=self.column,
+                      shards=S, lanes=B) as sp:
+            while np.any(lo < hi):
+                active = lo < hi
+                mid = (lo + hi) // 2
+                probe = np.where(active, mid, 0)
+                rows = Ciphertext(self._sorted.c0[s_idx, probe],
+                                  self._sorted.c1[s_idx, probe])  # [S,B,...]
+                obs.jit_launch("shard.index.probe", rows.c0, values.c0)
+                obs.count("eval.launches")
+                obs.count("eval.lanes", S * B)
+                v = np.asarray(ev(rows, values))               # [S, B] raw
+                c = np.where(np.abs(v) < taus[None, :], 0, np.sign(v))
+                lane_probes += active.sum(axis=0)
+                go_left = np.where(strict[None, :], c > 0, c >= 0)
+                hi = np.where(active & go_left, mid, hi)
+                lo = np.where(active & ~go_left, mid + 1, lo)
+            sp.set(probes=int(lane_probes.sum()))
+        obs.count("index.probes", int(lane_probes.sum()))
+        self.search_compares += int(lane_probes.sum())
+        self.last_probe_counts = lane_probes
         return lo
 
     # -- leaf resolution (executor plumbing) -------------------------------

@@ -36,9 +36,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import compare as C
 from repro.core.encrypt import Ciphertext
 from repro.core.keys import KeySet
+
+
+def _obs_stage(site: str, glo) -> None:
+    """Launch accounting for one compare-exchange stage (one batched
+    Eval over `glo.shape[0]` lanes); no-op unless obs is enabled."""
+    if not obs.is_enabled():
+        return
+    obs.jit_launch(site, (int(glo.shape[0]),))
+    obs.count("eval.launches")
+    obs.count("eval.lanes", int(glo.shape[0]))
 
 
 def shard_block_sort(ks: KeySet, cmp: Callable, c0, c1, ids, *,
@@ -49,11 +60,14 @@ def shard_block_sort(ks: KeySet, cmp: Callable, c0, c1, ids, *,
     n = c0.shape[0]
     assert n % block == 0
     compares = 0
-    for lo, hi, asc in C._bitonic_pairs(block):
-        flags = ~asc if descending else asc
-        glo, ghi, gasc = C._block_pairs(n // block, block, lo, hi, flags)
-        c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids, glo, ghi, gasc)
-        compares += int(glo.shape[0])
+    with obs.span("merge.block_sort", rows=int(n), block=int(block)):
+        for lo, hi, asc in C._bitonic_pairs(block):
+            flags = ~asc if descending else asc
+            glo, ghi, gasc = C._block_pairs(n // block, block, lo, hi, flags)
+            _obs_stage("merge.block_sort", glo)
+            c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
+                                          glo, ghi, gasc)
+            compares += int(glo.shape[0])
     return c0, c1, ids, compares
 
 
@@ -72,24 +86,30 @@ def merge_sorted_runs(ks: KeySet, cmp: Callable, c0, c1, ids, *,
     assert n % run == 0 and n // run == C.next_pow2(n // run)
     compares = 0
     while run < n:
-        pairs = n // (2 * run)
-        i = np.arange(run)
-        # half-cleaner: a[i] vs b[run-1-i], smaller stays in a
-        glo, ghi, gasc = C._block_pairs(pairs, 2 * run, i, 2 * run - 1 - i,
-                                        np.ones(run, bool))
-        c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids, glo, ghi, gasc)
-        compares += int(glo.shape[0])
-        stride = run // 2
-        while stride >= 1:
-            within = np.arange(run)
-            p = within[(within & stride) == 0]
-            glo, ghi, gasc = C._block_pairs(2 * pairs, run, p, p + stride,
-                                            np.ones(p.shape[0], bool))
+        with obs.span("merge.round", run=int(run), rows=int(n)):
+            pairs = n // (2 * run)
+            i = np.arange(run)
+            # half-cleaner: a[i] vs b[run-1-i], smaller stays in a
+            glo, ghi, gasc = C._block_pairs(pairs, 2 * run,
+                                            i, 2 * run - 1 - i,
+                                            np.ones(run, bool))
+            _obs_stage("merge.round", glo)
             c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
                                           glo, ghi, gasc)
             compares += int(glo.shape[0])
-            stride //= 2
-        run *= 2
+            stride = run // 2
+            while stride >= 1:
+                within = np.arange(run)
+                p = within[(within & stride) == 0]
+                glo, ghi, gasc = C._block_pairs(2 * pairs, run,
+                                                p, p + stride,
+                                                np.ones(p.shape[0], bool))
+                _obs_stage("merge.round", glo)
+                c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
+                                              glo, ghi, gasc)
+                compares += int(glo.shape[0])
+                stride //= 2
+            run *= 2
     return c0, c1, ids, compares
 
 
@@ -108,27 +128,32 @@ def topk_tournament(ks: KeySet, cmp: Callable, c0, c1, ids, *, kp: int,
     assert n_live % kp == 0
     compares = 0
     while n_live > stop_blocks * kp:
-        blocks = n_live // kp
-        j = jnp.arange(blocks // 2)
-        i = jnp.arange(kp)
-        lo_idx = ((2 * j * kp)[:, None] + i[None, :]).ravel()
-        hi_idx = (((2 * j + 1) * kp)[:, None] + (kp - 1 - i)[None, :]).ravel()
-        keep_larger = jnp.zeros(lo_idx.shape[0], bool)
-        c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
-                                      lo_idx, hi_idx, keep_larger)
-        compares += int(lo_idx.shape[0])
-        c0, c1, ids = c0[lo_idx], c1[lo_idx], ids[lo_idx]
-        n_live //= 2
-        stride = kp // 2
-        while stride >= 1:
-            within = jnp.arange(kp)
-            p = within[(within & stride) == 0]
-            glo, ghi, gasc = C._block_pairs(n_live // kp, kp, p, p + stride,
-                                            jnp.zeros(p.shape[0], bool))
+        with obs.span("merge.topk_round", live=int(n_live), kp=int(kp)):
+            blocks = n_live // kp
+            j = jnp.arange(blocks // 2)
+            i = jnp.arange(kp)
+            lo_idx = ((2 * j * kp)[:, None] + i[None, :]).ravel()
+            hi_idx = (((2 * j + 1) * kp)[:, None]
+                      + (kp - 1 - i)[None, :]).ravel()
+            keep_larger = jnp.zeros(lo_idx.shape[0], bool)
+            _obs_stage("merge.topk_round", lo_idx)
             c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
-                                          glo, ghi, gasc)
-            compares += int(glo.shape[0])
-            stride //= 2
+                                          lo_idx, hi_idx, keep_larger)
+            compares += int(lo_idx.shape[0])
+            c0, c1, ids = c0[lo_idx], c1[lo_idx], ids[lo_idx]
+            n_live //= 2
+            stride = kp // 2
+            while stride >= 1:
+                within = jnp.arange(kp)
+                p = within[(within & stride) == 0]
+                glo, ghi, gasc = C._block_pairs(n_live // kp, kp,
+                                                p, p + stride,
+                                                jnp.zeros(p.shape[0], bool))
+                _obs_stage("merge.topk_round", glo)
+                c0, c1, ids = C._compare_swap(ks, cmp, c0, c1, ids,
+                                              glo, ghi, gasc)
+                compares += int(glo.shape[0])
+                stride //= 2
     return c0, c1, ids, compares
 
 

@@ -33,6 +33,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.ckks import eps_to_tau
 from repro.core.keys import KeySet
 from repro.db import executor as X
@@ -77,44 +78,55 @@ class ShardedQueryServer:
         self._next_id = 0
         self.batch_log: List[ShardedBatchStats] = []
         self.compaction_log: list = []
+        self._tenants: Dict[int, str] = {}     # request id -> tenant label
 
     # -- queue -------------------------------------------------------------
 
-    def submit(self, query) -> int:
-        """Enqueue a Query (or bare predicate); returns a request id."""
+    def _enqueue(self, item, tenant: Optional[str]) -> int:
+        """Assign the next request id, remember its tenant, enqueue."""
+        qid = self._next_id
+        self._next_id += 1
+        if tenant is not None:
+            self._tenants[qid] = tenant
+        self._queue.append((qid, item))
+        return qid
+
+    def _bill_tenant(self, qid: int, stats) -> None:
+        """Per-tenant served-query + compare-lane attribution (counted
+        only when the obs layer is enabled)."""
+        if not obs.is_enabled():
+            return
+        tenant = self._tenants.get(qid, "default")
+        obs.count("server.queries", 1, tenant=tenant)
+        obs.count("server.compares", stats.filter_compares, tenant=tenant)
+
+    def submit(self, query, *, tenant: Optional[str] = None) -> int:
+        """Enqueue a Query (or bare predicate); returns a request id.
+        `tenant` labels the request for per-tenant metrics attribution."""
         if isinstance(query, P.Predicate):
             query = P.Query(where=query)
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, query))
-        return qid
+        return self._enqueue(query, tenant)
 
-    def submit_insert(self, data, key) -> int:
+    def submit_insert(self, data, key, *,
+                      tenant: Optional[str] = None) -> int:
         """Enqueue an insert (routed to the least-loaded shards' delta
         runs); resolves to a `MutationResult` with the new global ids."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation("insert", data=data,
-                                                 key=key)))
-        return qid
+        return self._enqueue(_QueuedMutation("insert", data=data, key=key),
+                             tenant)
 
-    def submit_delete(self, rows) -> int:
+    def submit_delete(self, rows, *, tenant: Optional[str] = None) -> int:
         """Enqueue a tombstone of global row ids; resolves to a
         `MutationResult` with the newly-dead count."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation(
-            "delete", rows=np.asarray(rows, np.int64))))
-        return qid
+        return self._enqueue(_QueuedMutation(
+            "delete", rows=np.asarray(rows, np.int64)), tenant)
 
-    def submit_update(self, rows, data, key) -> int:
+    def submit_update(self, rows, data, key, *,
+                      tenant: Optional[str] = None) -> int:
         """Enqueue an update (tombstone + re-insert); resolves to a
         `MutationResult` with the replacement global ids."""
-        qid = self._next_id
-        self._next_id += 1
-        self._queue.append((qid, _QueuedMutation(
-            "update", rows=np.asarray(rows, np.int64), data=data, key=key)))
-        return qid
+        return self._enqueue(_QueuedMutation(
+            "update", rows=np.asarray(rows, np.int64), data=data, key=key),
+            tenant)
 
     def run(self) -> Dict[int, X.QueryResult]:
         """Drain the queue in submit order: maximal same-kind runs —
@@ -145,12 +157,13 @@ class ShardedQueryServer:
 
     def _apply_mutation(self, m: _QueuedMutation) -> MutationResult:
         stable = self.stable
-        deleted = 0
-        if m.rows is not None:
-            deleted = stable.delete(m.rows)
-        row_ids = np.zeros(0, np.int64)
-        if m.data is not None:
-            row_ids = stable.insert(self.ks, m.data, m.key)
+        with obs.span("server.mutation", kind=m.kind):
+            deleted = 0
+            if m.rows is not None:
+                deleted = stable.delete(m.rows)
+            row_ids = np.zeros(0, np.int64)
+            if m.data is not None:
+                row_ids = stable.insert(self.ks, m.data, m.key)
         return MutationResult(m.kind, row_ids, deleted=deleted)
 
     def compact(self):
@@ -168,6 +181,12 @@ class ShardedQueryServer:
 
     def _run_batch(self, chunk: List[Tuple[int, P.Query]],
                    ) -> Dict[int, X.QueryResult]:
+        with obs.span("server.shard_batch", size=len(chunk),
+                      shards=self.stable.num_shards) as bsp:
+            return self._run_batch_traced(chunk, bsp)
+
+    def _run_batch_traced(self, chunk: List[Tuple[int, P.Query]], bsp,
+                          ) -> Dict[int, X.QueryResult]:
         t0 = time.perf_counter()
         ks, stable = self.ks, self.stable
         S, N = stable.num_shards, stable.n_padded_per_shard
@@ -219,6 +238,7 @@ class ShardedQueryServer:
             before = idx.search_compares
             pos = idx.search(ks, lanes, strict, taus)
             bstats.index_compares += idx.search_compares - before
+            base_counts = idx.last_probe_counts.copy()
             dsearch = {}
             for s in range(S):
                 didx = SX.shard_delta_probe_index(ks, stable, column, s,
@@ -226,14 +246,22 @@ class ShardedQueryServer:
                 if didx is None:
                     continue
                 before = didx.search_compares
-                dsearch[s] = (didx, didx.search(ks, lanes, strict, taus))
+                dsearch[s] = (didx, didx.search(ks, lanes, strict, taus),
+                              didx.last_probe_counts.copy())
                 bstats.index_compares += didx.search_compares - before
             for j, (pi, li) in enumerate(lane_ref[column]):
                 masks = idx.lane_masks(pos, j, W)
-                for s, (didx, dpos) in dsearch.items():
+                # per-query share of the shared launches: this query's
+                # two boundary lanes, base fan-out AND every delta-run
+                # search (sums across queries reconcile with bstats)
+                qstats[pi].index_compares += int(
+                    base_counts[2 * j] + base_counts[2 * j + 1])
+                for s, (didx, dpos, dcounts) in dsearch.items():
                     dl, dr = int(dpos[2 * j]), int(dpos[2 * j + 1])
                     masks[s][N + np.asarray(didx.perm[dl:dr],
                                             np.int64)] = True
+                    qstats[pi].index_compares += int(
+                        dcounts[2 * j] + dcounts[2 * j + 1])
                 leaf_masks[pi][li] = masks
                 qstats[pi].indexed_leaves += 1
 
@@ -267,6 +295,9 @@ class ShardedQueryServer:
             bstats.merge_compares += stats.merge_compares
             results[qid] = X.QueryResult(row_ids=row_ids, mask=mask,
                                          columns=columns, stats=stats)
+            self._bill_tenant(qid, stats)
         bstats.wall_s = time.perf_counter() - t0
+        bsp.set(queries=bstats.queries, eval_calls=bstats.eval_calls)
+        obs.absorb_batch_stats(bstats, shards=str(S))
         self.batch_log.append(bstats)
         return results

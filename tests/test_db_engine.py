@@ -404,6 +404,34 @@ def test_query_server_indexed_lanes(scheme_ks, rng):
         np.testing.assert_array_equal(results[qid].mask, want)
 
 
+def test_query_server_counters_reconcile(scheme_ks, rng):
+    """Per-query compare lanes sum exactly to the batch totals, on a
+    batch mixing indexed lanes and fused-scan atoms (eval_calls is a
+    per-query SHARE of the one launch, deliberately not summable)."""
+    ks = scheme_ks
+    vals = _vals(ks, rng.integers(0, 200, 48))
+    aux = _vals(ks, rng.integers(0, 200, 48))
+    t = db.Table.from_arrays(ks, "t", {"v": vals, "a": aux},
+                             jax.random.PRNGKey(21))
+    idx = db.SortedIndex.build(ks, t, "v")
+    server = db.QueryServer(ks, t, indexes={"v": idx}, batch=3)
+    qids = []
+    for i in range(2):
+        a, b = sorted(rng.integers(0, 200, 2).tolist())
+        lo = _bound(ks, _vals(ks, a), -1)
+        hi = _bound(ks, _vals(ks, b), +1)
+        qids.append(server.submit(db.Range("v", _enc(ks, lo, 700 + i),
+                                           _enc(ks, hi, 800 + i))))
+    qids.append(server.submit(db.Eq("a", _enc(ks, aux[3], 900))))
+    results = server.run()
+    b = server.batch_log[-1]
+    assert sum(results[q].stats.index_compares
+               for q in qids) == b.index_compares
+    assert sum(results[q].stats.scan_compares
+               for q in qids) == b.scan_compares
+    assert b.index_compares > 0 and b.scan_compares > 0
+
+
 def test_query_server_mixed_columns_and_topk(scheme_ks, rng):
     ks = scheme_ks
     vals = _vals(ks, rng.integers(0, 200, 40))

@@ -9,7 +9,7 @@ Two checks, both fail-on-regression:
      match a heading in that file.  External (http/https/mailto) links
      are out of scope — CI must not flake on the network.
   2. DOCSTRINGS.  Every public module / class / function / method under
-     src/repro/db/ (names not starting with "_") must carry a
+     src/repro/db/ and src/repro/obs/ (names not starting with "_") must carry a
      docstring.  The db layer is the repo's public query API; an
      undocumented entry point is a regression.
 
@@ -25,7 +25,8 @@ import sys
 REPO = pathlib.Path(__file__).resolve().parent.parent
 DOC_FILES = [REPO / "README.md", REPO / "src" / "repro" / "db" / "README.md"]
 DOC_GLOBS = [REPO / "docs"]
-PY_ROOT = REPO / "src" / "repro" / "db"
+PY_ROOTS = [REPO / "src" / "repro" / "db",
+            REPO / "src" / "repro" / "obs"]
 
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -97,12 +98,14 @@ def _missing_docstrings(tree: ast.Module, rel: str) -> list:
 
 
 def check_docstrings() -> list:
-    """Every public function/class under src/repro/db/ is documented."""
+    """Every public function/class under src/repro/db/ and
+    src/repro/obs/ is documented."""
     errors = []
-    for py in sorted(PY_ROOT.rglob("*.py")):
-        rel = str(py.relative_to(REPO))
-        tree = ast.parse(py.read_text())
-        errors.extend(_missing_docstrings(tree, rel))
+    for root in PY_ROOTS:
+        for py in sorted(root.rglob("*.py")):
+            rel = str(py.relative_to(REPO))
+            tree = ast.parse(py.read_text())
+            errors.extend(_missing_docstrings(tree, rel))
     return errors
 
 
