@@ -266,6 +266,92 @@ def run(profile: str = "test-bfv", mode: str = "paper",
     return ks, table, idx, vals
 
 
+def _median_timed(fn, reps: int = 3):
+    """Median-of-reps wall clock (the serving passes compare two timed
+    paths, so one slow scheduler tick must not decide the ratio)."""
+    ts, out = [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2], out
+
+
+def run_serve_scale(profile: str = "test-bfv", mode: str = "paper",
+                    sizes: tuple = (65536, 8192), queries: int = 8,
+                    reps: int = 3, lane_budget: int | None = None,
+                    tag: str = "db.serve") -> dict:
+    """Batched vs sequential serving across table sizes — the
+    bandwidth-cliff pass.
+
+    A batch of K same-column range queries is 2K eval lanes per row.
+    Stacked eagerly that is a 2K·N working set, which falls off the
+    cache/bandwidth cliff at large N (the measured 0.5x regression at
+    N=65536 that motivated the lane-budget tiling).  With column dedup
+    (the K queries share ONE ciphertext column) and lane-budgeted tiles,
+    the batch's working set is bounded by `lane_budget` regardless of N,
+    so batching must beat issuing the K queries one by one — asserted
+    here (`ratio >= 1.0`) at every size, and recorded per size in
+    BENCH_db.json with the budget that produced it."""
+    ks = _keys(profile, mode)
+    hg = load_dataset("hg38", scheme="bfv", t=ks.params.t).astype(np.int64)
+    rng = np.random.default_rng(3)
+    from repro.kernels import ops as KO
+    budget = KO.resolve_lane_budget(lane_budget)
+    summary: dict = {"queries": queries, "atoms": 2 * queries,
+                     "lane_budget": budget, "mode": mode, "sizes": {}}
+    for size in sizes:
+        vals = np.resize(hg, size)          # tile hg38 up to the target N
+        table = db.Table.from_arrays(ks, f"hg38_{size}", {"v": vals},
+                                     jax.random.PRNGKey(2))
+        bounds = []
+        for i in range(queries):
+            lo, hi = np.sort(rng.choice(vals, 2, replace=False))
+            bounds.append((int(lo), int(hi),
+                           _enc(ks, lo, 100 + i), _enc(ks, hi, 200 + i)))
+
+        def run_seq():
+            return [db.execute(ks, table, db.Range("v", c_lo, c_hi)).mask
+                    for _, _, c_lo, c_hi in bounds]
+
+        server = db.QueryServer(ks, table, batch=queries,
+                                lane_budget=lane_budget)
+
+        def run_batch():
+            qids = [server.submit(db.Range("v", c_lo, c_hi))
+                    for _, _, c_lo, c_hi in bounds]
+            res = server.run()
+            return [res[q].mask for q in qids]
+
+        run_seq(), run_batch()              # warm both paths' programs
+        seq_s, seq_masks = _median_timed(run_seq, reps)
+        m_b = _obs_mark()
+        bat_s, bat_masks = _median_timed(run_batch, reps)
+        d_b = _obs_since(m_b)
+        exact = all(
+            np.array_equal(sm, (vals >= lo) & (vals <= hi))
+            and np.array_equal(sm, bm)
+            for (lo, hi, _, _), sm, bm in zip(bounds, seq_masks, bat_masks))
+        ratio = seq_s / bat_s
+        # one pass row per size (append-mode JSON merges rows by name)
+        emit(f"{tag}.batched_vs_sequential.n{size}", bat_s / queries * 1e6,
+             f"rows={size};atoms={2 * queries};ratio={ratio:.2f}x;"
+             f"seq_us_per_q={seq_s / queries * 1e6:.0f};"
+             f"lane_budget={budget};reps={reps};exact={exact}{d_b}")
+        assert exact, f"served masks diverged from plaintext at N={size}"
+        assert ratio >= 1.0, (
+            f"batched serving lost to sequential at N={size}: "
+            f"{ratio:.2f}x (lane_budget={budget}) — the working-set "
+            f"tiling contract is broken")
+        summary["sizes"][str(size)] = {
+            "sequential_s_per_q": round(seq_s / queries, 4),
+            "batched_s_per_q": round(bat_s / queries, 4),
+            "ratio": round(ratio, 3),
+            "exact": bool(exact),
+        }
+    return summary
+
+
 GRID = 0.25       # float lattice step (>> test-ckks tolerance ~0.016)
 
 
@@ -702,7 +788,7 @@ if __name__ == "__main__":
     ap.add_argument("--queries", type=int, default=8)
     ap.add_argument("--ckks-rows", type=int, default=1024,
                     help="rows for the float-column pass (0 = skip)")
-    ap.add_argument("--shards", type=int, nargs="+", default=[1, 4],
+    ap.add_argument("--shards", type=int, nargs="*", default=[1, 4],
                     help="shard counts for the sharded pass (empty = skip)")
     ap.add_argument("--topk", type=int, default=8,
                     help="k for the sharded filter+topk pass")
@@ -711,6 +797,20 @@ if __name__ == "__main__":
     ap.add_argument("--write-rows", type=int, default=0,
                     help="inserted rows for the write pass "
                          "(0 = 5%% of base, -1 = skip)")
+    ap.add_argument("--serve-sizes", type=int, nargs="*",
+                    default=[65536, 8192],
+                    help="table sizes for the batched-vs-sequential "
+                         "serving pass (empty = skip)")
+    ap.add_argument("--serve-reps", type=int, default=3,
+                    help="timing reps (median) for the serving pass")
+    ap.add_argument("--lane-budget", type=int, default=0,
+                    help="eval lanes per fused-scan launch "
+                         "(0 = kernels.ops policy default)")
+    ap.add_argument("--skip-core", action="store_true",
+                    help="skip the core single-table passes (partial "
+                         "--append re-runs of later passes; implies "
+                         "skipping the write pass, which reuses the "
+                         "core pass's table)")
     ap.add_argument("--json", default="BENCH_db.json",
                     help="machine-readable output path ('' = skip)")
     ap.add_argument("--append", action="store_true",
@@ -721,8 +821,15 @@ if __name__ == "__main__":
     # carry its eval_launches / compare_lanes / jit_retraces share, and
     # the document gets one obs section with the totals
     obs.enable()
-    base = run(profile=args.profile, mode=args.mode, rows=args.rows,
-               queries=args.queries)
+    if args.lane_budget:
+        # process-wide: one knob governs the fused scans AND the join
+        # grids of every pass below (kernels.ops shared policy)
+        from repro.kernels import ops as _KO
+        _KO.set_lane_budget(args.lane_budget)
+    base = None
+    if not args.skip_core:
+        base = run(profile=args.profile, mode=args.mode, rows=args.rows,
+                   queries=args.queries)
     sharded_summary = None
     if args.shards:
         sharded_summary = run_sharded(profile=args.profile, mode=args.mode,
@@ -735,19 +842,33 @@ if __name__ == "__main__":
     if args.ckks_rows:
         run_ckks(rows=args.ckks_rows, queries=max(2, args.queries // 2))
     write_summary = None
-    if args.write_rows >= 0:
+    if args.write_rows >= 0 and base is not None:
         write_summary = run_write(profile=args.profile, mode=args.mode,
                                   rows=args.rows, n_insert=args.write_rows,
                                   base=base)
+    serve_summary = None
+    if args.serve_sizes:
+        serve_summary = run_serve_scale(
+            profile=args.profile, mode=args.mode,
+            sizes=tuple(args.serve_sizes), queries=args.queries,
+            reps=args.serve_reps, lane_budget=args.lane_budget or None)
     if args.json:
+        from repro.kernels import ops as _KO
         write_json(args.json,
                    meta={"benchmark": "db_engine", "profile": args.profile,
                          "mode": args.mode, "rows_arg": args.rows,
+                         "lane_budget": _KO.resolve_lane_budget(
+                             args.lane_budget or None),
                          "backend": jax.default_backend(),
                          "devices": jax.device_count(),
                          **obs.bench_fields()},
-                   extra={"sharded": sharded_summary,
-                          "join": join_summary,
-                          "write": write_summary,
-                          "obs": obs.metrics_dump()},
+                   # skipped passes stay absent (not null) so --append
+                   # re-runs never clobber sections they didn't produce
+                   extra={k: v for k, v in
+                          {"sharded": sharded_summary,
+                           "join": join_summary,
+                           "write": write_summary,
+                           "serve_scale": serve_summary,
+                           "obs": obs.metrics_dump()}.items()
+                          if v is not None},
                    append=args.append)

@@ -111,6 +111,73 @@ def jitted_eval(ks: KeySet):
     return _jitted(ks, "eval", lambda a, b: C.eval_value(ks, a, b))
 
 
+def jitted_dedup_eval(ks: KeySet, axis: int = 0):
+    """Jitted raw eval over a deduped column stack: gathers the unique
+    columns back to per-atom order (`jnp.take` by `sel` on `axis`)
+    INSIDE the program, then evaluates against the [A, 1] bounds.
+
+    The gather living inside the XLA program is the point — the host
+    hands over U unique columns however many atoms alias them, and the
+    per-atom copies only ever exist as fused intermediates bounded by
+    the tile size, never as a materialized A·N stack.
+
+    In paper mode the dedup goes further: `eval_value` is LINEAR in the
+    ciphertext pair (ctΔ then `scale·c0 + cek⊛c1` — NTT, pointwise, and
+    scalar ops are all exact mod-q linear maps), so the expensive
+    column-side transform runs ONCE per unique column and the per-atom
+    work collapses to a gather + coefficient-0 subtract.  A same-column
+    batch of A atoms costs ~1 column transform instead of A — bit-
+    identical raw values, this is pure factoring.  Gadget mode keeps
+    the joint form: `gadget_keymul` digit-decomposes its operand, which
+    is not linear, so splitting it would change the noise."""
+    from repro.core import ring as R
+
+    def g0(ct0, ct1):
+        # coefficient-0 eval part of one ciphertext: [..., K]
+        rng = ks.ring
+        scaled = R.scalar_mul(rng, ct0, ks.params.scale)
+        keyed = R.negacyclic_mul(rng, ct1, ks.cek)
+        return R.add(rng, scaled, keyed)[..., :, 0]
+
+    if ks.params.mode == "paper":
+        def fn(uc0, uc1, sel, b0, b1):
+            g_col = jnp.take(g0(uc0, uc1), sel, axis=axis)
+            diff = (g_col - g0(b0, b1)) % ks.ring.q_arr[:, 0]
+            return R.crt_centered(ks.params, diff)
+    else:
+        def fn(uc0, uc1, sel, b0, b1):
+            col = Ciphertext(jnp.take(uc0, sel, axis=axis),
+                             jnp.take(uc1, sel, axis=axis))
+            return C.eval_value(ks, col, Ciphertext(b0, b1))
+    return _jitted(ks, f"dedup_eval_ax{axis}", fn)
+
+
+def dedup_atom_columns(table, atoms: List[P.Atom],
+                       stack) -> Tuple[Ciphertext, np.ndarray]:
+    """Stack each DISTINCT scan column once + the [A] per-atom gather.
+
+    `stack(column)` returns the column's scan ciphertext (`scan_column`
+    on a Table, `scan_stack` on a ShardedTable); the returned `sel`
+    maps atom i to its row in the unique stack, first-seen order — K
+    range atoms over one column contribute ONE stacked copy."""
+    order: Dict[str, int] = {}
+    for a in atoms:
+        order.setdefault(a.column, len(order))
+    cols = [stack(c) for c in order]
+    axis = 0 if cols[0].c0.ndim == 3 else 1     # after the shard dim
+    uniq = Ciphertext(jnp.stack([c.c0 for c in cols], axis=axis),
+                      jnp.stack([c.c1 for c in cols], axis=axis))
+    sel = np.asarray([order[a.column] for a in atoms], np.int64)
+    return uniq, sel
+
+
+def stack_atom_bounds(atoms: List[P.Atom]) -> Ciphertext:
+    """The [A, 1] per-atom trapdoor bounds stack every fused scan
+    broadcasts against its column tiles."""
+    return Ciphertext(jnp.stack([a.value.c0 for a in atoms])[:, None],
+                      jnp.stack([a.value.c1 for a in atoms])[:, None])
+
+
 def atom_tau(ks: KeySet, atom: P.Atom) -> int:
     """The decode threshold atom resolves to (profile τ or ε-derived)."""
     if atom.eps is None:
@@ -125,50 +192,71 @@ def jitted_comparator(ks: KeySet):
 
 
 def fused_eval(ks: KeySet, table: Table, atoms: List[P.Atom], *,
-               engine: str = "jnp") -> np.ndarray:
-    """RAW eval values for all atoms in ONE batched Eval: [A, N] int64
+               engine: str = "jnp",
+               lane_budget: Optional[int] = None) -> np.ndarray:
+    """RAW eval values for all atoms' fused scan: [A, N] int64
     (N = `table.scan_width`: a pending delta run's slots ride the SAME
-    launch as the base block — base ∪ delta costs one program, not two).
+    program as the base block — base ∪ delta costs one pass, not two).
+
+    Duplicate-free and working-set bounded: the host stacks each
+    DISTINCT column ONCE ([U, N] bytes moved, not [A, N] — K range
+    queries over one column used to ship K full copies) and the
+    per-atom gather + [A, 1] bounds broadcast happen INSIDE the jitted
+    program.  Rows tile into power-of-two chunks of T with A·T lanes
+    within the lane budget (`kernels.ops.lane_tile`; explicit
+    `lane_budget` > `set_lane_budget` > `REPRO_LANE_BUDGET` > default),
+    so peak intermediates stay off the bandwidth cliff however many
+    atoms a batch fuses — each tile is one launch, same shapes across
+    queries, at most one extra ragged-tail shape when N is not a
+    multiple of T.
 
     Thresholds are deliberately NOT applied here: each atom decodes its
     own τ (profile default or ε-derived) host-side in `scan_leaf_mask`,
-    so a plan mixing exact and ε-band predicates still runs one launch.
+    so a plan mixing exact and ε-band predicates still shares launches.
     """
+    from repro.kernels import ops as KO
     with obs.span("executor.fused_eval", atoms=len(atoms),
-                  rows=table.scan_width) as sp:
-        cols = {a.column: table.scan_column(a.column) for a in atoms}
-        col = Ciphertext(
-            jnp.stack([cols[a.column].c0 for a in atoms]),
-            jnp.stack([cols[a.column].c1 for a in atoms]))
-        bounds = Ciphertext(
-            jnp.stack([a.value.c0 for a in atoms])[:, None],
-            jnp.stack([a.value.c1 for a in atoms])[:, None])
-        obs.jit_launch("executor.fused_eval", col.c0, bounds.c0)
-        obs.count("eval.launches")
-        obs.count("eval.lanes", col.c0.shape[0] * col.c0.shape[1])
-        obs.count("bytes.moved", 2 * (col.c0.nbytes + bounds.c0.nbytes))
-        if _use_kernel(engine):
-            from repro.kernels import ops as KO
-            A, N = col.c0.shape[0], col.c0.shape[1]
-            flat = Ciphertext(col.c0.reshape((A * N,) + col.c0.shape[2:]),
-                              col.c1.reshape((A * N,) + col.c1.shape[2:]))
-            b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
-            b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
-            bflat = Ciphertext(b0.reshape(flat.c0.shape),
-                               b1.reshape(flat.c1.shape))
-            out = sp.sync(KO.eval_values(ks, flat, bflat))
-            return np.asarray(out).reshape(A, N)
-        return np.asarray(sp.sync(jitted_eval(ks)(col, bounds)))
+                  rows=table.scan_width):
+        A, W = len(atoms), table.scan_width
+        uniq, sel = dedup_atom_columns(table, atoms, table.scan_column)
+        bounds = stack_atom_bounds(atoms)
+        T = KO.lane_tile(W, A, lane_budget)
+        # host<->device traffic is the deduped reality: U unique column
+        # stacks + A bounds, counted once however many tiles launch
+        obs.count("bytes.moved", 2 * (uniq.c0.nbytes + bounds.c0.nbytes))
+        use_kernel = _use_kernel(engine)
+        sel_j = jnp.asarray(sel)
+        out = np.empty((A, W), dtype=np.int64)
+        for lo in range(0, W, T):
+            t = min(T, W - lo)
+            with obs.span("executor.eval_tile", offset=lo, rows=t) as tsp:
+                tile = Ciphertext(uniq.c0[:, lo:lo + t],
+                                  uniq.c1[:, lo:lo + t])
+                obs.jit_launch("executor.fused_eval", tile.c0, bounds.c0)
+                obs.count("eval.launches")
+                obs.count("eval.tiles")
+                obs.count("eval.lanes", A * t)
+                if use_kernel:
+                    col = Ciphertext(jnp.take(tile.c0, sel_j, axis=0),
+                                     jnp.take(tile.c1, sel_j, axis=0))
+                    vals = tsp.sync(KO.broadcast_eval_values(ks, col,
+                                                             bounds))
+                else:
+                    vals = tsp.sync(jitted_dedup_eval(ks)(
+                        tile.c0, tile.c1, sel_j, bounds.c0, bounds.c1))
+                out[:, lo:lo + t] = np.asarray(vals)
+        return out
 
 
 def fused_compare(ks: KeySet, table: Table, atoms: List[P.Atom], *,
-                  engine: str = "jnp") -> np.ndarray:
-    """Three-way outcomes (profile τ) for all atoms in ONE batched Eval.
+                  engine: str = "jnp",
+                  lane_budget: Optional[int] = None) -> np.ndarray:
+    """Three-way outcomes (profile τ) for all atoms' fused scan.
 
     Compatibility wrapper over `fused_eval` for callers that want the
     -1/0/+1 view; the executor itself consumes the raw values.
     """
-    v = fused_eval(ks, table, atoms, engine=engine)
+    v = fused_eval(ks, table, atoms, engine=engine, lane_budget=lane_budget)
     tau = ks.params.tau
     return np.where(np.abs(v) < tau, 0, np.sign(v)).astype(np.int32)
 
@@ -274,6 +362,7 @@ def index_leaf_mask(ks: KeySet, table: Table, idx: SortedIndex,
 def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
                  indexes: Optional[Dict[str, SortedIndex]] = None,
                  engine: str = "jnp",
+                 lane_budget: Optional[int] = None,
                  stats: Optional[ExecStats] = None) -> List[np.ndarray]:
     """Per-leaf row masks over the union slot space (`table.scan_width`):
     indexed leaves via binary search (base index + per-delta-run
@@ -295,7 +384,8 @@ def filter_masks(ks: KeySet, table: Table, plan: P.CompiledPlan, *,
             scan_atoms.extend(atoms)
             stats.scan_leaves += 1
     if scan_atoms:
-        vals = fused_eval(ks, table, scan_atoms, engine=engine)
+        vals = fused_eval(ks, table, scan_atoms, engine=engine,
+                          lane_budget=lane_budget)
         stats.eval_calls += 1
         stats.scan_compares += len(scan_atoms) * W
         for leaf_i, start, count in scan_slices:
@@ -351,13 +441,15 @@ def _topk_compares(n: int, k: int) -> int:
 
 def execute(ks: KeySet, table, query, *,
             indexes: Optional[Dict[str, SortedIndex]] = None,
-            engine: str = "jnp") -> QueryResult:
+            engine: str = "jnp",
+            lane_budget: Optional[int] = None) -> QueryResult:
     """Run a Query (or bare predicate / precompiled plan) against a table.
 
     Accepts a `Table` or a `ShardedTable` — sharded tables dispatch to
     the shard-parallel executor (`db.shard.execute_sharded`; their
     `indexes` must then be `ShardedIndex` instances), so call sites stay
-    placement-agnostic."""
+    placement-agnostic.  `lane_budget` caps the fused scan's per-launch
+    eval lanes (None = the shared `kernels.ops` policy default)."""
     import sys
     # sys.modules guard keeps non-shard users import-free: a ShardedTable
     # argument implies repro.db.shard.table is already loaded
@@ -365,7 +457,7 @@ def execute(ks: KeySet, table, query, *,
     if shard_mod is not None and isinstance(table, shard_mod.ShardedTable):
         from repro.db.shard.executor import execute_sharded
         return execute_sharded(ks, table, query, indexes=indexes,
-                               engine=engine)
+                               engine=engine, lane_budget=lane_budget)
     if isinstance(query, (P.Query, P.Predicate)):
         plan = P.compile_plan(query)
     elif isinstance(query, P.CompiledPlan):
@@ -375,7 +467,8 @@ def execute(ks: KeySet, table, query, *,
     stats = ExecStats()
     with obs.span("executor.execute", leaves=plan.num_leaves):
         leaf_masks = filter_masks(ks, table, plan, indexes=indexes,
-                                  engine=engine, stats=stats)
+                                  engine=engine, lane_budget=lane_budget,
+                                  stats=stats)
         slot_mask = combine_tree(plan.tree, leaf_masks, table.scan_width)
         slot_mask &= table.slot_valid      # pads AND tombstones excluded
         row_ids = table.slot_global_ids[np.nonzero(slot_mask)[0]]

@@ -62,8 +62,19 @@ from repro.db.table import Table, rows_to_mask
 # [T·N_r, K, n] eval intermediates in tens of MB on the test profiles
 # while leaving every tile ONE fused launch.  Tiles are power-of-two
 # sized so repeated queries against the same table pair reuse the jit
-# cache entry.
+# cache entry.  Pair-grid entry points take `block_pairs=None` and
+# resolve through the shared lane-budget policy
+# (`kernels.ops.resolve_lane_budget` with THIS default), so a
+# process-wide `set_lane_budget` / `REPRO_LANE_BUDGET` override governs
+# join grids and fused scans with one knob.
 DEFAULT_BLOCK_PAIRS = 1 << 14
+
+
+def _resolve_block_pairs(block_pairs: Optional[int]) -> int:
+    """The effective pair budget for a grid launch: explicit argument >
+    shared lane-budget overrides > `DEFAULT_BLOCK_PAIRS`."""
+    from repro.kernels import ops as KO
+    return KO.resolve_lane_budget(block_pairs, default=DEFAULT_BLOCK_PAIRS)
 
 
 @dataclasses.dataclass
@@ -153,17 +164,20 @@ def _grid_tile(block_pairs: int, n_left: int, n_right: int) -> int:
 
 def pair_eval_values(ks: KeySet, left_ct: Ciphertext, right_ct: Ciphertext,
                      *, engine: str = "jnp",
-                     block_pairs: int = DEFAULT_BLOCK_PAIRS,
+                     block_pairs: Optional[int] = None,
                      stats: Optional[JoinStats] = None) -> np.ndarray:
     """RAW eval values for every (left row, right row) pair: [L, R] int64.
 
     Tiled: left rows chunk into power-of-two blocks of T rows, each tile
     ONE batched Eval over the [T, R] broadcast grid (the fused-scan
-    `[A, N]` layout with left rows as the atom dim).  Thresholds are
-    deliberately NOT applied — callers decode with the join's own τ
-    host-side, so ε-band joins share these launches (the `fused_eval`
-    contract, extended to row pairs).
+    `[A, N]` layout with left rows as the atom dim).  `block_pairs=None`
+    resolves through the shared lane-budget policy (see
+    `DEFAULT_BLOCK_PAIRS`).  Thresholds are deliberately NOT applied —
+    callers decode with the join's own τ host-side, so ε-band joins
+    share these launches (the `fused_eval` contract, extended to row
+    pairs).
     """
+    block_pairs = _resolve_block_pairs(block_pairs)
     L = int(left_ct.c0.shape[0])
     R = int(right_ct.c0.shape[0])
     T = _grid_tile(block_pairs, L, R)
@@ -176,6 +190,7 @@ def pair_eval_values(ks: KeySet, left_ct: Ciphertext, right_ct: Ciphertext,
                            left_ct.c1[lo:lo + T, None])          # [T, 1, ...]
             obs.jit_launch("join.pair_grid", a.c0, b.c0)
             obs.count("eval.launches")
+            obs.count("eval.tiles")
             obs.count("eval.lanes", min(T, L - lo) * R)
             if use_kernel:
                 from repro.kernels import ops as KO
@@ -370,7 +385,7 @@ def execute_join(ks: KeySet, left, right, join: P.Join, *,
                  left_indexes: Optional[Dict[str, SortedIndex]] = None,
                  right_indexes: Optional[Dict[str, SortedIndex]] = None,
                  engine: str = "jnp",
-                 block_pairs: int = DEFAULT_BLOCK_PAIRS) -> JoinResult:
+                 block_pairs: Optional[int] = None) -> JoinResult:
     """Run a `Join` between two encrypted tables.
 
     Accepts `Table`s or `ShardedTable`s — any sharded side dispatches to

@@ -110,13 +110,17 @@ class QueryServer:
     def __init__(self, ks: KeySet, table: Table, *,
                  indexes: Optional[Dict[str, SortedIndex]] = None,
                  batch: int = 4, engine: str = "jnp",
-                 compact_threshold: Optional[int] = None):
+                 compact_threshold: Optional[int] = None,
+                 lane_budget: Optional[int] = None):
         self.ks = ks
         self.table = table
         self.indexes = indexes or {}
         self.batch = int(batch)
         self.engine = engine
         self.compact_threshold = compact_threshold
+        # per-launch eval-lane cap for the shared fused scans AND the
+        # deduped join pair grids (None = the kernels.ops policy default)
+        self.lane_budget = lane_budget
         self._queue: List[Tuple[int, P.Query]] = []
         self._next_id = 0
         self.batch_log: List[BatchStats] = []
@@ -347,9 +351,11 @@ class QueryServer:
                         dcounts[2 * j] + dcounts[2 * j + 1])
                 leaf_masks[pi][li] = rows_to_mask(np.concatenate(slots), W)
 
-        # ONE fused Eval for every scan atom of every query in the batch
+        # ONE fused Eval pass for every scan atom of every query in the
+        # batch (deduped columns, lane-budgeted tiles)
         if scan_atoms:
-            vals = X.fused_eval(ks, table, scan_atoms, engine=self.engine)
+            vals = X.fused_eval(ks, table, scan_atoms, engine=self.engine,
+                                lane_budget=self.lane_budget)
             bstats.eval_calls += 1
             bstats.scan_compares += len(scan_atoms) * W
             for pi, li, start, count in scan_ref:
@@ -444,7 +450,8 @@ class QueryServer:
                     scratch = J.JoinStats()
                     grids[key] = J.pair_eval_values(
                         ks, table.column(lcol), right.column(rcol),
-                        engine=self.engine, stats=scratch)
+                        engine=self.engine, block_pairs=self.lane_budget,
+                        stats=scratch)
                     bstats.grid_evals += scratch.eval_calls
                     bstats.pair_compares += scratch.pair_compares
                 jstats.pair_compares += table.n_padded * right.n_padded
@@ -491,6 +498,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--index", action="store_true",
                     help="build a sorted index and serve lookups through it")
+    ap.add_argument("--lane-budget", type=int, default=0,
+                    help="eval lanes per fused-scan launch "
+                         "(0 = kernels.ops policy default)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -511,7 +521,8 @@ def main(argv=None) -> dict:
         t_build = time.perf_counter() - t0
 
     rng = np.random.default_rng(args.seed)
-    server = QueryServer(ks, table, indexes=indexes, batch=args.batch)
+    server = QueryServer(ks, table, indexes=indexes, batch=args.batch,
+                         lane_budget=args.lane_budget or None)
     truth = {}
     for _ in range(args.requests):
         lo, hi = np.sort(rng.choice(vals, 2, replace=False))

@@ -53,49 +53,59 @@ class ShardedExecStats(X.ExecStats):
 
 def sharded_fused_eval(ks: KeySet, stable: ShardedTable,
                        atoms: List[P.Atom], *,
-                       engine: str = "jnp") -> np.ndarray:
-    """RAW eval values for all atoms over all shards in ONE launch:
+                       engine: str = "jnp",
+                       lane_budget: Optional[int] = None) -> np.ndarray:
+    """RAW eval values for all atoms over all shards' fused scan:
     [S, A, shard_scan_width] int64 — each shard's lane covers its base
     block AND its pending delta run (`scan_stack`), so the write path
-    never costs a second launch.  Thresholds are NOT applied here (same
-    contract as `db.executor.fused_eval`)."""
+    never costs a second pass.  Thresholds are NOT applied here (same
+    contract as `db.executor.fused_eval`).
+
+    Same dedup + lane-tiling discipline as the single-table scan: each
+    DISTINCT column's shard stack moves once ([S, U, N] bytes), the
+    per-atom gather runs inside the program (under `shard_map` on a
+    usable mesh — `sel` rides as a replicated operand), and the shard
+    row axis tiles into power-of-two chunks with S·A·T lanes within the
+    lane budget."""
+    from repro.kernels import ops as KO
     with obs.span("shard.fused_eval", shards=stable.num_shards,
                   atoms=len(atoms), rows=stable.shard_scan_width) as sp:
-        cols = {a.column: stable.scan_stack(a.column) for a in atoms}
-        col = Ciphertext(
-            jnp.stack([cols[a.column].c0 for a in atoms], axis=1),
-            jnp.stack([cols[a.column].c1 for a in atoms], axis=1))
-        bounds = Ciphertext(
-            jnp.stack([a.value.c0 for a in atoms])[:, None],
-            jnp.stack([a.value.c1 for a in atoms])[:, None])
-        obs.jit_launch("shard.fused_eval", col.c0, bounds.c0)
-        obs.count("eval.launches")
-        obs.count("eval.lanes",
-                  col.c0.shape[0] * col.c0.shape[1] * col.c0.shape[2])
-        obs.count("bytes.moved", 2 * (col.c0.nbytes + bounds.c0.nbytes))
+        S, A = stable.num_shards, len(atoms)
+        W = stable.shard_scan_width
+        uniq, sel = X.dedup_atom_columns(stable, atoms, stable.scan_stack)
+        bounds = X.stack_atom_bounds(atoms)
+        T = KO.lane_tile(W, S * A, lane_budget)
+        obs.count("bytes.moved", 2 * (uniq.c0.nbytes + bounds.c0.nbytes))
         use_kernel = X._use_kernel(engine)
         spec = stable.spec
         if spec.shard_map_ok:
-            from repro.kernels import ops as KO
             sp.set(shard_map=True)
-            out = sp.sync(KO.shard_eval_values(ks, col, bounds,
-                                               mesh=spec.mesh,
-                                               axis_name=spec.axis,
-                                               use_kernel=use_kernel))
-            return np.asarray(out)
-        if use_kernel:
-            from repro.kernels import ops as KO
-            S, A, N = col.c0.shape[:3]
-            flat = Ciphertext(
-                col.c0.reshape((S * A * N,) + col.c0.shape[3:]),
-                col.c1.reshape((S * A * N,) + col.c1.shape[3:]))
-            b0 = jnp.broadcast_to(bounds.c0, col.c0.shape)
-            b1 = jnp.broadcast_to(bounds.c1, col.c1.shape)
-            bflat = Ciphertext(b0.reshape(flat.c0.shape),
-                               b1.reshape(flat.c1.shape))
-            out = sp.sync(KO.eval_values(ks, flat, bflat))
-            return np.asarray(out).reshape(S, A, N)
-        return np.asarray(sp.sync(X.jitted_eval(ks)(col, bounds)))
+        sel_j = jnp.asarray(sel)
+        out = np.empty((S, A, W), dtype=np.int64)
+        for lo in range(0, W, T):
+            t = min(T, W - lo)
+            with obs.span("shard.eval_tile", offset=lo, rows=t) as tsp:
+                tile = Ciphertext(uniq.c0[:, :, lo:lo + t],
+                                  uniq.c1[:, :, lo:lo + t])
+                obs.jit_launch("shard.fused_eval", tile.c0, bounds.c0)
+                obs.count("eval.launches")
+                obs.count("eval.tiles")
+                obs.count("eval.lanes", S * A * t)
+                if spec.shard_map_ok:
+                    vals = tsp.sync(KO.shard_eval_values(
+                        ks, tile, bounds, mesh=spec.mesh,
+                        axis_name=spec.axis, use_kernel=use_kernel,
+                        sel=sel_j))
+                elif use_kernel:
+                    col = Ciphertext(jnp.take(tile.c0, sel_j, axis=1),
+                                     jnp.take(tile.c1, sel_j, axis=1))
+                    vals = tsp.sync(KO.broadcast_eval_values(ks, col,
+                                                             bounds))
+                else:
+                    vals = tsp.sync(X.jitted_dedup_eval(ks, axis=1)(
+                        tile.c0, tile.c1, sel_j, bounds.c0, bounds.c1))
+                out[:, :, lo:lo + t] = np.asarray(vals)
+        return out
 
 
 def shard_delta_probe_index(ks: KeySet, stable: ShardedTable, column: str,
@@ -144,6 +154,7 @@ def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
                          plan: P.CompiledPlan, *,
                          indexes: Optional[Dict[str, object]] = None,
                          engine: str = "jnp",
+                         lane_budget: Optional[int] = None,
                          stats: Optional[ShardedExecStats] = None,
                          ) -> List[List[np.ndarray]]:
     """Per-leaf, per-shard union-slot masks (width `shard_scan_width`):
@@ -172,7 +183,8 @@ def sharded_filter_masks(ks: KeySet, stable: ShardedTable,
             scan_atoms.extend(atoms)
             stats.scan_leaves += 1
     if scan_atoms:
-        vals = sharded_fused_eval(ks, stable, scan_atoms, engine=engine)
+        vals = sharded_fused_eval(ks, stable, scan_atoms, engine=engine,
+                                  lane_budget=lane_budget)
         stats.eval_calls += 1
         stats.scan_compares += len(scan_atoms) * S * W
         stats.per_shard_scan_compares += len(scan_atoms) * W
@@ -276,9 +288,11 @@ def order_rows_sharded(ks: KeySet, stable: ShardedTable, query: P.Query,
 
 def execute_sharded(ks: KeySet, stable: ShardedTable, query, *,
                     indexes: Optional[Dict[str, object]] = None,
-                    engine: str = "jnp") -> X.QueryResult:
+                    engine: str = "jnp",
+                    lane_budget: Optional[int] = None) -> X.QueryResult:
     """Run a Query (or bare predicate / precompiled plan) against a
-    ShardedTable.  Same result contract as `db.execute`."""
+    ShardedTable.  Same result contract as `db.execute` (`lane_budget`
+    caps the fused scan's per-launch eval lanes, None = shared policy)."""
     if isinstance(query, (P.Query, P.Predicate)):
         plan = P.compile_plan(query)
     elif isinstance(query, P.CompiledPlan):
@@ -290,7 +304,9 @@ def execute_sharded(ks: KeySet, stable: ShardedTable, query, *,
     with obs.span("shard.execute", shards=stable.num_shards,
                   leaves=plan.num_leaves):
         leaf_masks = sharded_filter_masks(ks, stable, plan, indexes=indexes,
-                                          engine=engine, stats=stats)
+                                          engine=engine,
+                                          lane_budget=lane_budget,
+                                          stats=stats)
         mask = combine_shard_masks(stable, plan, leaf_masks)
         row_ids = np.nonzero(mask)[0]
         row_ids = order_rows_sharded(ks, stable, plan.query, row_ids, stats)

@@ -57,7 +57,7 @@ def _as_sharded(ks: KeySet, table) -> ShardedTable:
 
 def sharded_pair_eval(ks: KeySet, left: ShardedTable, right: ShardedTable,
                       lcol: str, rcol: str, *, engine: str = "jnp",
-                      block_pairs: int = J.DEFAULT_BLOCK_PAIRS,
+                      block_pairs: Optional[int] = None,
                       stats: Optional[J.JoinStats] = None) -> np.ndarray:
     """RAW eval values over the full shard-pair grid:
     [S_l, S_r, N_l, N_r] int64.
@@ -68,10 +68,12 @@ def sharded_pair_eval(ks: KeySet, left: ShardedTable, right: ShardedTable,
     each device's [S_r, N_l, N_r] slab.  The right rows tile into
     power-of-two chunks so each device's slab stays within
     `block_pairs` eval lanes — the same memory cap the single-table
-    tiles enforce, now per shard.  Meshless, the grid flattens to a
-    [S_l·N_l, S_r·N_r] pair matrix and reuses the tiled single-table
-    launches.  Either way, thresholds are NOT applied here (the
-    `fused_eval` raw-value contract)."""
+    tiles enforce, now per shard (`block_pairs=None` resolves through
+    the shared lane-budget policy, see `db.join.DEFAULT_BLOCK_PAIRS`).
+    Meshless, the grid flattens to a [S_l·N_l, S_r·N_r] pair matrix and
+    reuses the tiled single-table launches.  Either way, thresholds are
+    NOT applied here (the `fused_eval` raw-value contract)."""
+    block_pairs = J._resolve_block_pairs(block_pairs)
     lct, rct = left.columns[lcol], right.columns[rcol]
     S_l, N_l = lct.c0.shape[:2]
     S_r, N_r = rct.c0.shape[:2]
@@ -190,7 +192,7 @@ def execute_join_sharded(ks: KeySet, left, right, join: P.Join, *,
                          left_indexes: Optional[Dict[str, object]] = None,
                          right_indexes: Optional[Dict[str, object]] = None,
                          engine: str = "jnp",
-                         block_pairs: int = J.DEFAULT_BLOCK_PAIRS,
+                         block_pairs: Optional[int] = None,
                          ) -> J.JoinResult:
     """Run a `Join` where either side is a `ShardedTable`.
 

@@ -67,13 +67,17 @@ class ShardedQueryServer:
     def __init__(self, ks: KeySet, stable: ShardedTable, *,
                  indexes: Optional[Dict[str, ShardedIndex]] = None,
                  batch: int = 4, engine: str = "jnp",
-                 compact_threshold: Optional[int] = None):
+                 compact_threshold: Optional[int] = None,
+                 lane_budget: Optional[int] = None):
         self.ks = ks
         self.stable = stable
         self.indexes = indexes or {}
         self.batch = int(batch)
         self.engine = engine
         self.compact_threshold = compact_threshold
+        # per-launch eval-lane cap for the shard-parallel fused scans
+        # (None = the kernels.ops policy default)
+        self.lane_budget = lane_budget
         self._queue: List[Tuple[int, P.Query]] = []
         self._next_id = 0
         self.batch_log: List[ShardedBatchStats] = []
@@ -269,7 +273,8 @@ class ShardedQueryServer:
         # (over the union scan width — base blocks AND delta runs)
         if scan_atoms:
             vals = SX.sharded_fused_eval(ks, stable, scan_atoms,
-                                         engine=self.engine)
+                                         engine=self.engine,
+                                         lane_budget=self.lane_budget)
             bstats.eval_calls += 1
             bstats.scan_compares += len(scan_atoms) * S * W
             bstats.per_shard_scan_compares += len(scan_atoms) * W

@@ -7,6 +7,8 @@ and the benchmark harness to demonstrate the fused-path speedup.
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +23,69 @@ from repro.kernels import ntt as NK
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# lane-budget policy: the one knob bounding every eval launch's working set
+# ---------------------------------------------------------------------------
+
+# Default ceiling on eval LANES per launch (one lane = one [K, n]
+# polynomial compare).  Every NTT-stage intermediate scales with the
+# lane count, so this is the working-set bound that keeps a launch on
+# the fast side of the cache/bandwidth cliff: the measured hg38 serving
+# regression (ROADMAP) showed [2, 65536]-lane launches ~2x faster per
+# lane than one [16, 65536] program — 1 << 17 is that fast regime's
+# size.  Scan tiles (`db.executor.fused_eval`) and join grid tiles
+# (`db.join.pair_eval_values`, via its own DEFAULT_BLOCK_PAIRS default)
+# both resolve through this policy, so one knob governs both.
+DEFAULT_LANE_BUDGET = 1 << 17
+
+_LANE_BUDGET_OVERRIDE: int | None = None
+
+
+def set_lane_budget(budget: int | None) -> int | None:
+    """Install a process-wide lane-budget override (None clears it).
+
+    Returns the previous override so callers can restore it — the knob
+    every entry point resolves through `resolve_lane_budget`, preferred
+    over threading a parameter when tuning a whole serving process.
+    """
+    global _LANE_BUDGET_OVERRIDE
+    prev = _LANE_BUDGET_OVERRIDE
+    _LANE_BUDGET_OVERRIDE = None if budget is None else int(budget)
+    return prev
+
+
+def resolve_lane_budget(explicit: int | None = None, *,
+                        default: int = DEFAULT_LANE_BUDGET) -> int:
+    """The effective lane budget: explicit argument > `set_lane_budget`
+    override > `REPRO_LANE_BUDGET` env var > `default` (callers with
+    their own historical default — join's `DEFAULT_BLOCK_PAIRS` — pass
+    it here so the shared overrides still win)."""
+    if explicit is not None:
+        return int(explicit)
+    if _LANE_BUDGET_OVERRIDE is not None:
+        return _LANE_BUDGET_OVERRIDE
+    env = os.environ.get("REPRO_LANE_BUDGET")
+    if env:
+        return int(env)
+    return default
+
+
+def lane_tile(n_rows: int, lanes_per_row: int,
+              lane_budget: int | None = None, *,
+              default: int = DEFAULT_LANE_BUDGET) -> int:
+    """Rows per tile: the largest power of two T with T·lanes_per_row
+    within the lane budget, clamped to [1, n_rows].
+
+    The same formula `db.join._grid_tile` has always used for pair
+    grids, exposed for every tiled launch: power-of-two tiles keep the
+    jit cache warm across queries (at most one extra compiled shape for
+    a ragged tail when n_rows is not a multiple of T)."""
+    b = resolve_lane_budget(lane_budget, default=default)
+    t = max(1, b // max(1, lanes_per_row))
+    t = 1 << (t.bit_length() - 1)
+    return min(t, n_rows)
 
 
 def _pad_batch(x: jax.Array, block_b: int):
@@ -149,6 +214,7 @@ def _ks_cache(ks: KeySet, name: str) -> dict:
 def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
                       mesh, axis_name: str = "shard",
                       use_kernel: bool = False,
+                      sel: jax.Array | None = None,
                       block_b: int = NK.DEFAULT_BLOCK_B,
                       interpret: bool | None = None) -> jax.Array:
     """Shard-parallel raw eval values under `shard_map`.
@@ -166,11 +232,20 @@ def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
     decoded masks are reduced host-side.  `use_kernel=True` routes the
     per-device compute through the Pallas `cmp_eval` path (flattening
     local batch dims the way the single-device kernel entry does).
+
+    `sel` supports the deduped fused-scan layout: ct0 carries UNIQUE
+    columns [S, U, ...] and `sel` is the [A] per-atom gather into that
+    unique axis (axis 1), applied INSIDE the mapped program — host-side
+    bytes moved stay U·N while the program still evaluates all A atom
+    lanes against the replicated [A, 1] bounds.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     from repro.core import compare as C
 
-    def local_eval(c00, c01, b0, b1):
+    def local_eval(c00, c01, b0, b1, *sel_arg):
+        if sel_arg:
+            c00 = jnp.take(c00, sel_arg[0], axis=1)
+            c01 = jnp.take(c01, sel_arg[0], axis=1)
         if not use_kernel:
             return C.eval_value(ks, Ciphertext(c00, c01),
                                 Ciphertext(b0, b1))
@@ -181,13 +256,20 @@ def shard_eval_values(ks: KeySet, ct0: Ciphertext, ct1: Ciphertext, *,
     from jax.sharding import PartitionSpec as P
     nd0, nd1 = ct0.c0.ndim, ct1.c0.ndim
     cache = _ks_cache(ks, "_shard_eval_cache")
-    key = (id(mesh), axis_name, use_kernel, interpret, block_b, nd0, nd1)
+    key = (id(mesh), axis_name, use_kernel, interpret, block_b, nd0, nd1,
+           sel is not None)
     if key not in cache:
         spec0 = P(axis_name, *([None] * (nd0 - 1)))
         rep = P(*([None] * nd1))
+        in_specs = [spec0, spec0, rep, rep]
+        if sel is not None:
+            in_specs.append(P(None))         # gather indices: replicated
         out_spec = P(axis_name, *([None] * (nd0 - 3)))
         fn = _shard_map(local_eval, mesh=mesh,
-                        in_specs=(spec0, spec0, rep, rep),
+                        in_specs=tuple(in_specs),
                         out_specs=out_spec, check_rep=False)
         cache[key] = jax.jit(fn)
-    return cache[key](ct0.c0, ct0.c1, ct1.c0, ct1.c1)
+    args = (ct0.c0, ct0.c1, ct1.c0, ct1.c1)
+    if sel is not None:
+        args += (jnp.asarray(sel),)
+    return cache[key](*args)

@@ -10,6 +10,10 @@ under `obs.tracing()`, then fails loudly unless:
     `obs.validate_chrome_trace`);
   * the spans the batch MUST produce are present: the batch span, the
     fused raw-eval launch, and the index binary search;
+  * the server runs with a deliberately tiny `lane_budget`, so the
+    fused scan splits into lane tiles — every `executor.eval_tile`
+    span must nest under an `executor.fused_eval` parent (the tiling
+    must refine the launch accounting, never restructure the tree);
   * per-query compare lanes reconcile exactly with the batch totals.
 
 The trace lands at --out (default trace_smoke.json) and CI uploads it
@@ -51,8 +55,10 @@ def main(argv=None) -> int:
         return E.encrypt(ks, np.int64(int(v)), jax.random.PRNGKey(s))
 
     # one batch mixing indexed lanes ("v") and a fused-scan atom: both
-    # launch kinds must show up in the trace
-    server = db.QueryServer(ks, table, indexes={"v": idx}, batch=3)
+    # launch kinds must show up in the trace.  lane_budget=8 forces the
+    # 16-wide fused scan into 2 tiles so the tile spans are exercised.
+    server = db.QueryServer(ks, table, indexes={"v": idx}, batch=3,
+                            lane_budget=8)
     qids = [server.submit(db.Range("v", enc(5, 2), enc(30, 3))),
             server.submit(db.Eq("a", enc(2, 4))),    # unindexed -> scan
             server.submit(db.Query(where=db.Range("v", enc(3, 5),
@@ -60,9 +66,25 @@ def main(argv=None) -> int:
                                    top_k=db.TopK("v", 3)))]
     with obs.tracing() as tr:
         results = server.run()
+        spans = list(tr.spans)
         tr.write_chrome_trace(args.out)
 
     errors = []
+
+    # tile spans must NEST under the fused launch: the lane tiling is a
+    # refinement of executor.fused_eval, not a sibling of it
+    by_sid = {s.sid: s for s in spans}
+    tiles = [s for s in spans if s.name == "executor.eval_tile"]
+    if len(tiles) < 2:
+        errors.append(f"lane_budget=8 on a 16-wide scan must produce "
+                      f">=2 executor.eval_tile spans, got {len(tiles)}")
+    for s in tiles:
+        parent = by_sid.get(s.parent_sid)
+        if parent is None or parent.name != "executor.fused_eval":
+            errors.append(
+                f"executor.eval_tile span (sid={s.sid}) not nested under "
+                f"executor.fused_eval (parent="
+                f"{parent.name if parent else None})")
 
     doc = json.load(open(args.out))
     errors += obs.validate_chrome_trace(doc)
