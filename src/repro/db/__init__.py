@@ -12,6 +12,8 @@ plan stage into one batched Eval, and a batched multi-query server.
     compile_plan / execute — lower + run a plan (indexes optional)
     execute_join — batched nested-loop or sort-merge join execution
     QueryServer  — K client queries against one table in one fused pass
+    ServeLoop    — always-on multi-tenant loop: admission control,
+                   deadline-aware two-class scheduling, pow2 bucketing
     compact      — fold a table's pending delta run into base + indexes
 
 Write path: `Table.insert/update/delete` land rows in a pow2-padded
@@ -80,6 +82,8 @@ _SHARD_EXPORTS = ("ShardSpec", "ShardedTable", "ShardedIndex",
 
 _SERVE_EXPORTS = ("QueryServer", "MutationResult")
 
+_LOOP_EXPORTS = ("ServeLoop", "AdmissionPolicy", "Response", "LoopStats")
+
 
 def __getattr__(name):
     # lazy: keeps `python -m repro.db.query_serve` free of the runpy
@@ -88,6 +92,9 @@ def __getattr__(name):
     if name in _SERVE_EXPORTS:
         from repro.db import query_serve as _qs
         return getattr(_qs, name)
+    if name in _LOOP_EXPORTS:
+        from repro.db import serve_loop as _sl
+        return getattr(_sl, name)
     if name in _SHARD_EXPORTS:
         from repro.db import shard as _shard
         return getattr(_shard, name)

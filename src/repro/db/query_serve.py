@@ -126,6 +126,10 @@ class QueryServer:
         self.batch_log: List[BatchStats] = []
         self.compaction_log: list = []
         self._tenants: Dict[int, str] = {}     # request id -> tenant label
+        # server-scope memo of on-the-fly sort-merge runs:
+        # (id(table), column) -> (table.version at build, sorted run);
+        # a mutation bumps the table's version, invalidating its entries
+        self._run_cache: Dict[Tuple[int, str], Tuple[int, tuple]] = {}
 
     # -- queue -------------------------------------------------------------
 
@@ -408,22 +412,26 @@ class QueryServer:
         each distinct triple costs ONE tiled raw-eval grid for the whole
         batch, every join decoding it under its own τ/ε and masks.
         Sort-merge runs come from per-side indexes when provided; runs
-        built on the fly are memoized per (table, column) within the
-        batch, so K sort-merge joins never pay K O(n log² n) sorts.
+        built on the fly are memoized per (table, column) at SERVER
+        scope in `self._run_cache`, keyed by the table's mutation
+        version — so consecutive batches joining on the same un-indexed
+        column pay the O(n log² n) sort once, and any insert/delete/
+        update (which bumps `table.version`) invalidates the entry.
         """
         ks, table = self.ks, self.table
         grids: Dict[Tuple[int, str, str], np.ndarray] = {}
-        run_cache: Dict[Tuple[int, str], tuple] = {}
         out: Dict[int, J.JoinResult] = {}
 
         def side_run(side_table, col, index, jstats):
-            key = (id(side_table), col)
             if index is not None:
                 return index.sorted_run()
-            if key not in run_cache:
-                run_cache[key] = J._sorted_run(ks, side_table, col, None,
-                                               jstats)
-            return run_cache[key]
+            key = (id(side_table), col)
+            hit = self._run_cache.get(key)
+            if hit is not None and hit[0] == side_table.version:
+                return hit[1]
+            run = J._sorted_run(ks, side_table, col, None, jstats)
+            self._run_cache[key] = (side_table.version, run)
+            return run
         for (qid, cj, item), slot in zip(joins, join_slot):
             lcol, rcol = cj.on_columns
             right = item.right

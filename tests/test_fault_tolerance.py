@@ -101,3 +101,69 @@ def test_resume_plan(tmp_path):
     CKPT.save(str(tmp_path), 7, {"w": jnp.zeros((2,))})
     plan = EL.resume_plan(str(tmp_path))
     assert plan == {"restore_step": 7, "next_batch_index": 7}
+
+
+# ---------------------------------------------------------------------------
+# Serving-loop fault tolerance: a fault stays inside one request, and the
+# loop's pump heartbeats the same FleetMonitor the training fleet uses.
+# ---------------------------------------------------------------------------
+
+def _loop_world(ks):
+    """A tiny registered ServeLoop: (loop, server, probe ciphertexts)."""
+    from repro import db
+    from repro.core import encrypt as E
+    from repro.db.serve_loop import ServeLoop
+
+    vals = np.array([3, 1, 4, 1, 5, 9, 2, 6], dtype=np.int64)
+    table = db.Table.from_arrays(ks, "t", {"v": vals},
+                                 jax.random.PRNGKey(0))
+    server = db.QueryServer(
+        ks, table, indexes={"v": db.SortedIndex.build(ks, table, "v")},
+        batch=8)
+    loop = ServeLoop(batch=8)
+    loop.register("t", server)
+    probes = [E.encrypt(ks, np.int64(int(v)), jax.random.PRNGKey(10 + i))
+              for i, v in enumerate(vals[:4])]
+    return loop, server, probes
+
+
+def test_serve_loop_poisoned_request_does_not_stop_service(bfv_engine_ks):
+    """A plan referencing a missing column fails ONLY its own request:
+    the batch-mates answer, the loop stays serviceable for later
+    submissions, and the failure is an explicit FAILED response — the
+    serving analogue of the fleet's evict-and-continue contract."""
+    from repro import db
+    from repro.db.serve_loop import FAILED, OK
+
+    loop, _, probes = _loop_world(bfv_engine_ks)
+    good1 = loop.submit("a", "t", db.Eq("v", probes[0]))
+    bad = loop.submit("a", "t", db.Eq("no_such_column", probes[1]))
+    good2 = loop.submit("a", "t", db.Eq("v", probes[2]))
+    res = loop.run_until_idle()
+    assert res[bad].status == FAILED and res[bad].error
+    assert res[good1].status == OK and res[good2].status == OK
+
+    after = loop.submit("a", "t", db.Eq("v", probes[3]))
+    res = loop.run_until_idle()
+    assert res[after].status == OK
+    assert loop.stats.failed == 1 and loop.stats.served == 3
+
+
+def test_serve_loop_heartbeats_fleet_monitor(bfv_engine_ks):
+    """Each pump heartbeats the loop's host into FleetMonitor with the
+    pump wall time as its step time — a stalled serving host goes dead
+    by the SAME liveness rule as a stalled training host."""
+    from repro import db
+    from repro.db.serve_loop import ServeLoop
+
+    cfg = EL.ElasticConfig(beat_interval_s=1.0, dead_after=3)
+    mon = EL.FleetMonitor(cfg, [0, 1], now=0.0)
+    loop, server, probes = _loop_world(bfv_engine_ks)
+    loop2 = ServeLoop(batch=8, monitor=mon, monitor_host=0)
+    loop2.register("t", server)
+    loop2.submit("a", "t", db.Eq("v", probes[0]))
+    loop2.run_until_idle()
+    assert mon.hosts[0].step_times          # pump wall time recorded
+    # just after host 0's pump beat, only the never-beating host 1
+    # (last_beat frozen at the t=0 construction) is past the limit
+    assert mon.dead_hosts(now=mon.hosts[0].last_beat + 1.0) == [1]
