@@ -43,9 +43,11 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
+import weakref
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -127,9 +129,15 @@ class QueryServer:
         self.compaction_log: list = []
         self._tenants: Dict[int, str] = {}     # request id -> tenant label
         # server-scope memo of on-the-fly sort-merge runs:
-        # (id(table), column) -> (table.version at build, sorted run);
-        # a mutation bumps the table's version, invalidating its entries
-        self._run_cache: Dict[Tuple[int, str], Tuple[int, tuple]] = {}
+        # (id(table), column) -> (weakref to the table, version at
+        # build, sorted run).  The weakref guards against id reuse — a
+        # transient right table can be GC'd and its id recycled by a
+        # fresh Table (which also starts at version 0), so a hit is
+        # valid only if the referent is STILL the probing table AND the
+        # version matches; the ref's callback evicts the entry when the
+        # table dies, so dead runs are not pinned either
+        self._run_cache: Dict[Tuple[int, str],
+                              Tuple["weakref.ref", int, tuple]] = {}
 
     # -- queue -------------------------------------------------------------
 
@@ -141,6 +149,26 @@ class QueryServer:
             self._tenants[qid] = tenant
         self._queue.append((qid, item))
         return qid
+
+    def clear_queue(self) -> int:
+        """Drop every queued, not-yet-drained request; returns how many
+        were dropped.  The fault-recovery reset: after `run()` raises,
+        the queue may hold a partially-consumed drain — callers that
+        retry (e.g. `ServeLoop`) clear it before re-submitting."""
+        dropped = len(self._queue)
+        self._queue = []
+        return dropped
+
+    @contextlib.contextmanager
+    def batch_size(self, n: int):
+        """Temporarily set the drain batch size (restored on exit, even
+        if the drain raises) — how `ServeLoop` runs a drafted batch as
+        ONE shared launch without clobbering the configured size."""
+        old, self.batch = self.batch, max(1, int(n))
+        try:
+            yield self
+        finally:
+            self.batch = old
 
     def _bill_tenant(self, qid: int, stats) -> None:
         """Per-tenant served-query + compare-lane attribution (counted
@@ -413,10 +441,12 @@ class QueryServer:
         batch, every join decoding it under its own τ/ε and masks.
         Sort-merge runs come from per-side indexes when provided; runs
         built on the fly are memoized per (table, column) at SERVER
-        scope in `self._run_cache`, keyed by the table's mutation
-        version — so consecutive batches joining on the same un-indexed
-        column pay the O(n log² n) sort once, and any insert/delete/
-        update (which bumps `table.version`) invalidates the entry.
+        scope in `self._run_cache`, guarded by a weakref to the table
+        plus its mutation version — so consecutive batches joining on
+        the same un-indexed column pay the O(n log² n) sort once, any
+        insert/delete/update (which bumps `table.version`) invalidates
+        the entry, and a recycled `id()` from a dead transient table
+        can never alias a live one's entry.
         """
         ks, table = self.ks, self.table
         grids: Dict[Tuple[int, str, str], np.ndarray] = {}
@@ -427,10 +457,17 @@ class QueryServer:
                 return index.sorted_run()
             key = (id(side_table), col)
             hit = self._run_cache.get(key)
-            if hit is not None and hit[0] == side_table.version:
-                return hit[1]
+            if (hit is not None and hit[0]() is side_table
+                    and hit[1] == side_table.version):
+                return hit[2]
             run = J._sorted_run(ks, side_table, col, None, jstats)
-            self._run_cache[key] = (side_table.version, run)
+
+            def evict(ref, key=key, cache=self._run_cache):
+                ent = cache.get(key)
+                if ent is not None and ent[0] is ref:
+                    del cache[key]
+            self._run_cache[key] = (weakref.ref(side_table, evict),
+                                    side_table.version, run)
             return run
         for (qid, cj, item), slot in zip(joins, join_slot):
             lcol, rcol = cj.on_columns

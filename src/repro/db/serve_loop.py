@@ -45,7 +45,13 @@ servers —
     retries its requests one by one — the poisoned request alone
     resolves FAILED (with the error string), everyone else's answer is
     recovered, and the loop keeps serving.  (The engine raises before
-    per-tenant billing, so obs counters stay reconciled.)
+    per-tenant billing, so obs counters stay reconciled; recovery goes
+    through the servers' public `clear_queue()` / `batch_size()` API.)
+  * **bounded retention**: only the most recent `max_responses`
+    terminal responses (and batch shapes) are retained — older ones
+    evict oldest-first, and clients `forget(ticket)` results as they
+    consume them — so the always-on stream never grows loop memory
+    without bound.
 
 Observability (all no-ops unless `obs.tracing()` is active):
 `serve.queue_depth` histogram (depth at every admit and pump),
@@ -67,6 +73,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import collections
 import dataclasses
 import json
 import threading
@@ -196,7 +203,8 @@ class ServeLoop:
     def __init__(self, *, policy: Optional[AdmissionPolicy] = None,
                  batch: int = 8, pow2_buckets: bool = True,
                  clock: Callable[[], float] = time.monotonic,
-                 monitor=None, monitor_host: int = 0):
+                 monitor=None, monitor_host: int = 0,
+                 max_responses: int = 65536):
         self.policy = policy or AdmissionPolicy()
         self.batch = int(batch)
         self.pow2_buckets = bool(pow2_buckets)
@@ -206,10 +214,18 @@ class ServeLoop:
         # scaffolding's dead-host/straggler logic watches the loop
         self.monitor = monitor
         self.monitor_host = monitor_host
+        # retention bound for the always-on mode: only the most recent
+        # `max_responses` TERMINAL responses (and batch shapes) are
+        # kept — unread older terminals are evicted oldest-first, so a
+        # continuous stream cannot grow loop memory without bound.
+        # PENDING responses are never evicted (callers also `forget()`
+        # terminals they have consumed to release results eagerly)
+        self.max_responses = int(max_responses)
         self.stats = LoopStats()
         self.batch_shapes: List[Tuple[str, str, int]] = []  # (table, klass, size)
         self._regs: Dict[str, _Registration] = {}
         self._responses: Dict[int, Response] = {}
+        self._terminal: "collections.deque[int]" = collections.deque()
         self._next_ticket = 0
         self._next_seq = 0
         self._lock = threading.Lock()        # queue + response state
@@ -264,8 +280,12 @@ class ServeLoop:
         return ""
 
     def _admit(self, tenant: str, table: str, klass: str, kind: str,
-               payload: dict, deadline: Optional[float]) -> int:
-        """Create the ticket; enqueue or immediately REJECT."""
+               payload: dict, deadline: Optional[float], *,
+               reject: str = "") -> int:
+        """Create the ticket; enqueue or immediately REJECT.  A
+        non-empty `reject` reason rejects unconditionally — the request
+        is never enqueued, so no pump can race a draft against the
+        rejection."""
         with self._lock:
             reg = self._regs.get(table)
             if reg is None:
@@ -277,12 +297,13 @@ class ServeLoop:
             resp = Response(ticket=ticket, tenant=tenant, table=table,
                             klass=klass, deadline=deadline, submit_t=now)
             self._responses[ticket] = resp
-            reason = self._admit_error(reg, tenant)
+            reason = reject or self._admit_error(reg, tenant)
             if reason:
                 resp.status = REJECTED
                 resp.error = reason
                 resp.done_t = now
                 self.stats.rejected += 1
+                self._retire(ticket)
                 obs.count("serve.rejected", 1, tenant=tenant)
                 return ticket
             seq = self._next_seq
@@ -294,6 +315,16 @@ class ServeLoop:
                         sum(len(r.pending) for r in self._regs.values()))
             return ticket
 
+    def _retire(self, ticket: int) -> None:
+        """Record a newly-terminal ticket; evict the oldest retained
+        terminals (and batch shapes) past `max_responses` (caller holds
+        the lock)."""
+        self._terminal.append(ticket)
+        while len(self._terminal) > self.max_responses:
+            self._responses.pop(self._terminal.popleft(), None)
+        if len(self.batch_shapes) > self.max_responses:
+            del self.batch_shapes[:-self.max_responses]
+
     # -- submission --------------------------------------------------------
 
     def submit(self, tenant: str, table: str, query, *,
@@ -302,7 +333,11 @@ class ServeLoop:
         """Submit a Query (or bare predicate) for `tenant` against
         `table`; returns a ticket.  `deadline` (loop-clock seconds) is
         shed-or-flag advisory; `klass` overrides auto classification
-        ("point"/"bulk")."""
+        ("point"/"bulk"; anything else raises ValueError — an unknown
+        class would pend forever, no pump drafts it)."""
+        if klass is not None and klass not in (POINT, BULK):
+            raise ValueError(
+                f"klass must be {POINT!r} or {BULK!r}, got {klass!r}")
         reg = self._regs.get(table)
         if reg is None:
             raise KeyError(f"no table {table!r} registered")
@@ -319,19 +354,13 @@ class ServeLoop:
         class.  REJECTED with an explanatory error if the server has no
         join support (the sharded server does not, yet)."""
         if not hasattr(self._require(table).server, "submit_join"):
-            ticket = self._admit(tenant, table, BULK, "join", {}, deadline)
-            with self._lock:
-                resp = self._responses[ticket]
-                if resp.status != REJECTED:
-                    self._remove_pending(table, ticket)
-                    resp.status = REJECTED
-                    resp.error = (f"table {table!r}'s server does not "
-                                  "support joins")
-                    resp.done_t = self.clock()
-                    self.stats.rejected += 1
-                    self.stats.admitted -= 1
-                    obs.count("serve.rejected", 1, tenant=tenant)
-            return ticket
+            # rejected inside _admit, atomically: the request is never
+            # enqueued, so a concurrent pump cannot draft (and fail) it
+            # before the rejection lands
+            return self._admit(
+                tenant, table, BULK, "join", {}, deadline,
+                reject=(f"table {table!r}'s server does not "
+                        "support joins"))
         P.compile_join(join)      # validate shape at submit time
         return self._admit(tenant, table, BULK, "join",
                            {"join": join, "right": right,
@@ -364,14 +393,31 @@ class ServeLoop:
     # -- results -----------------------------------------------------------
 
     def response(self, ticket: int) -> Response:
-        """The Response for `ticket` (PENDING until a pump resolves it)."""
+        """The Response for `ticket` (PENDING until a pump resolves it).
+        KeyError once the terminal response has been `forget()`-acked or
+        evicted past the `max_responses` retention bound."""
         with self._lock:
             return self._responses[ticket]
 
     def responses(self) -> Dict[int, Response]:
-        """Snapshot of every ticket's Response."""
+        """Snapshot of every RETAINED ticket's Response (terminals past
+        the `max_responses` bound are evicted oldest-first)."""
         with self._lock:
             return dict(self._responses)
+
+    def forget(self, ticket: int) -> Optional[Response]:
+        """Ack-and-release one TERMINAL response (returns it, or None if
+        unknown/already released) — continuous-stream clients forget
+        tickets as they consume them so results are not pinned until
+        the retention bound evicts them.  PENDING tickets are refused
+        (ValueError): their result has nowhere else to land."""
+        with self._lock:
+            resp = self._responses.get(ticket)
+            if resp is None:
+                return None
+            if resp.status == PENDING:
+                raise ValueError(f"ticket {ticket} is still PENDING")
+            return self._responses.pop(ticket)
 
     def queue_depth(self, tenant: Optional[str] = None) -> int:
         """Pending (admitted, not yet drafted) request count, optionally
@@ -385,10 +431,6 @@ class ServeLoop:
         if reg is None:
             raise KeyError(f"no table {table!r} registered")
         return reg
-
-    def _remove_pending(self, table: str, ticket: int) -> None:
-        reg = self._regs[table]
-        reg.pending = [p for p in reg.pending if p.ticket != ticket]
 
     # -- scheduling --------------------------------------------------------
 
@@ -528,7 +570,7 @@ class ServeLoop:
                 res = server.run()
                 self._finish(p, OK, result=res[qid])
             except Exception as e:          # noqa: BLE001 — isolate faults
-                server._queue = []
+                server.clear_queue()
                 self._finish(p, FAILED, error=f"{type(e).__name__}: {e}")
         self.stats.batches += 1
         self.batch_shapes.append((reg.name, WRITE, 1))
@@ -556,28 +598,25 @@ class ServeLoop:
         with obs.span("serve.batch", table=reg.name, klass=klass,
                       size=size):
             self._mark_start(drafted, klass)
-            old_batch = server.batch
             try:
-                server.batch = max(1, size)
-                qids = {p.ticket: self._submit_one(server, p)
-                        for p in drafted}
-                res = server.run()
+                with server.batch_size(size):
+                    qids = {p.ticket: self._submit_one(server, p)
+                            for p in drafted}
+                    res = server.run()
                 for p in drafted:
                     self._finish(p, OK, result=res[qids[p.ticket]])
             except Exception:               # noqa: BLE001 — isolate faults
-                server._queue = []          # drop the failed drain's leftovers
-                server.batch = 1
+                server.clear_queue()        # drop the failed drain's leftovers
                 for p in drafted:
                     try:
-                        qid = self._submit_one(server, p)
-                        res = server.run()
+                        with server.batch_size(1):
+                            qid = self._submit_one(server, p)
+                            res = server.run()
                         self._finish(p, OK, result=res[qid])
                     except Exception as e:  # noqa: BLE001
-                        server._queue = []
+                        server.clear_queue()
                         self._finish(p, FAILED,
                                      error=f"{type(e).__name__}: {e}")
-            finally:
-                server.batch = old_batch
         return size
 
     def _finish(self, p: _Pending, status: str, *, result=None,
@@ -589,6 +628,7 @@ class ServeLoop:
             resp.result = result
             resp.error = error
             resp.done_t = self.clock()
+            self._retire(p.ticket)
             if status == OK:
                 self.stats.served += 1
                 if (p.deadline is not None

@@ -27,6 +27,7 @@ the per-shard merge networks.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
@@ -94,6 +95,26 @@ class ShardedQueryServer:
             self._tenants[qid] = tenant
         self._queue.append((qid, item))
         return qid
+
+    def clear_queue(self) -> int:
+        """Drop every queued, not-yet-drained request; returns how many
+        were dropped.  The fault-recovery reset: after `run()` raises,
+        the queue may hold a partially-consumed drain — callers that
+        retry (e.g. `ServeLoop`) clear it before re-submitting."""
+        dropped = len(self._queue)
+        self._queue = []
+        return dropped
+
+    @contextlib.contextmanager
+    def batch_size(self, n: int):
+        """Temporarily set the drain batch size (restored on exit, even
+        if the drain raises) — how `ServeLoop` runs a drafted batch as
+        ONE shared launch without clobbering the configured size."""
+        old, self.batch = self.batch, max(1, int(n))
+        try:
+            yield self
+        finally:
+            self.batch = old
 
     def _bill_tenant(self, qid: int, stats) -> None:
         """Per-tenant served-query + compare-lane attribution (counted

@@ -77,11 +77,12 @@ def _env(ks):
     return _ENV[id(ks)]
 
 
-def _mk_loop(ks, *, index=True, policy=None, batch=8, clock=time.monotonic):
+def _mk_loop(ks, *, index=True, policy=None, batch=8, clock=time.monotonic,
+             **kw):
     table, indexes, pool = _env(ks)
     server = db.QueryServer(ks, table, indexes=indexes if index else {},
                             batch=batch)
-    loop = ServeLoop(policy=policy, batch=batch, clock=clock)
+    loop = ServeLoop(policy=policy, batch=batch, clock=clock, **kw)
     loop.register("t", server)
     return loop, server, table, pool
 
@@ -166,6 +167,23 @@ def test_join_on_sharded_server_rejected_explicitly(bfv_engine_ks):
     r = loop.response(t)
     assert r.status == REJECTED and "does not support joins" in r.error
     assert loop.queue_depth() == 0 and loop.stats.admitted == 0
+    # the rejection is atomic at admission: never enqueued, never
+    # drafted, terminal counters reconcile (no double counting)
+    assert loop.stats.submitted == loop.stats.rejected == 1
+    assert loop.stats.failed == 0 and loop.batch_shapes == []
+
+
+def test_unknown_klass_override_raises(bfv_engine_ks):
+    """A klass outside {point, bulk} would pend forever (no pump drafts
+    it) — submit() refuses it up front, admitting nothing."""
+    ks = bfv_engine_ks
+    loop, _, _, pool = _mk_loop(ks)
+    with pytest.raises(ValueError, match="klass"):
+        loop.submit("a", "t", db.Eq("v", pool[15]), klass="interactive")
+    assert loop.stats.submitted == 0 and loop.queue_depth() == 0
+    loop.submit("a", "t", db.Eq("v", pool[15]), klass=BULK)  # valid override
+    assert all(r.status == OK
+               for r in loop.run_until_idle().values())
 
 
 # ---------------------------------------------------------------------------
@@ -657,6 +675,49 @@ def test_run_until_idle_resolves_everything(bfv_engine_ks):
 
 
 # ---------------------------------------------------------------------------
+# bounded response retention (the always-on mode must not leak)
+# ---------------------------------------------------------------------------
+
+def test_terminal_responses_bounded_by_max_responses(bfv_engine_ks):
+    """Only the `max_responses` most recent TERMINAL responses stay
+    readable — older ones evict oldest-first, so a continuous stream
+    cannot grow loop memory without bound.  Stats still count every
+    request."""
+    ks = bfv_engine_ks
+    loop, _, _, pool = _mk_loop(ks, max_responses=2)
+    tks = [loop.submit("a", "t", db.Eq("v", pool[int(VALS[i])]))
+           for i in range(4)]
+    res = loop.run_until_idle()
+    assert set(res) == set(tks[2:])            # evicted oldest-first
+    for t in tks[:2]:
+        with pytest.raises(KeyError):
+            loop.response(t)
+    assert all(res[t].status == OK for t in tks[2:])
+    assert loop.stats.served == 4
+    assert len(loop.batch_shapes) <= 2         # shapes bounded too
+
+
+def test_forget_releases_terminal_responses(bfv_engine_ks):
+    """Continuous-stream clients ack results as they consume them:
+    forget() releases a terminal response eagerly, refuses PENDING
+    tickets, and is a no-op on unknown/already-released ones."""
+    ks = bfv_engine_ks
+    loop, _, _, pool = _mk_loop(ks)
+    t1 = loop.submit("a", "t", db.Eq("v", pool[15]))
+    loop.run_until_idle()
+    t2 = loop.submit("a", "t", db.Eq("v", pool[26]))
+    with pytest.raises(ValueError):
+        loop.forget(t2)                        # still PENDING
+    loop.run_until_idle()
+    r = loop.forget(t1)
+    assert r.status == OK
+    assert loop.forget(t1) is None             # already released
+    with pytest.raises(KeyError):
+        loop.response(t1)
+    assert loop.response(t2).status == OK      # unacked ticket retained
+
+
+# ---------------------------------------------------------------------------
 # property tests: random arrival sequences (hypothesis / seeded sweep)
 # ---------------------------------------------------------------------------
 
@@ -770,6 +831,39 @@ else:
 
 
 # ---------------------------------------------------------------------------
+# public fault-recovery API on the servers (the loop uses no internals)
+# ---------------------------------------------------------------------------
+
+def test_clear_queue_and_batch_size_public_api(bfv_engine_ks):
+    """The loop's fault recovery rides public server API: clear_queue()
+    drops queued requests, batch_size() restores the configured size
+    even when the drain raises — on BOTH server flavors."""
+    ks = bfv_engine_ks
+    table, indexes, pool = _env(ks)
+    server = db.QueryServer(ks, table, indexes=indexes, batch=3)
+    server.submit(db.Eq("v", pool[15]))
+    server.submit(db.Eq("v", pool[26]))
+    assert server.clear_queue() == 2
+    assert server.run() == {}                  # nothing left to drain
+    with server.batch_size(8):
+        assert server.batch == 8
+    assert server.batch == 3
+    with pytest.raises(RuntimeError, match="boom"):
+        with server.batch_size(5):
+            raise RuntimeError("boom")
+    assert server.batch == 3                   # restored on failure too
+
+    stable = db.ShardedTable.from_table(ks, table,
+                                        spec=db.ShardSpec.create(2))
+    sserver = db.ShardedQueryServer(ks, stable, batch=3)
+    sserver.submit(db.Eq("v", pool[15]))
+    assert sserver.clear_queue() == 1 and sserver.run() == {}
+    with sserver.batch_size(4):
+        assert sserver.batch == 4
+    assert sserver.batch == 3
+
+
+# ---------------------------------------------------------------------------
 # satellite fix: server-scope sort-merge run cache
 # ---------------------------------------------------------------------------
 
@@ -802,3 +896,56 @@ def test_sorted_run_cache_survives_batches_until_mutation(bfv_engine_ks):
     r3 = server.run()[q3]
     assert r3.stats.build_compares > 0
     assert len(r3.pairs) > len(r2.pairs)   # the new row joined
+
+
+def test_run_cache_recycled_table_id_cannot_alias(bfv_engine_ks):
+    """A dead transient table's memoized run must never serve a fresh
+    table that recycled its id(): fresh tables all start at version 0,
+    so the version check alone would pass — the weakref identity guard
+    refuses the hit and the run is rebuilt for the right rows."""
+    ks = bfv_engine_ks
+    table = _table(ks, VALS[:8], name="t_alias")
+    lidx = {"v": db.SortedIndex.build(ks, table, "v")}
+    server = db.QueryServer(ks, table, indexes=lidx, batch=1)
+    j = db.Join(None, None, on="v")
+    decoy = db.Table.from_arrays(          # rows that match NOTHING
+        ks, "t_alias_d", {"v": np.full(6, 61, np.int64)},
+        jax.random.PRNGKey(6))
+    server.submit_join(j, decoy, strategy="sort_merge")
+    server.run()
+    stale = server._run_cache[(id(decoy), "v")]
+    right = db.Table.from_arrays(ks, "t_alias_r", {"v": VALS[:6]},
+                                 jax.random.PRNGKey(7))
+    assert right.version == decoy.version == 0
+    # simulate CPython id reuse: plant the decoy's entry under the
+    # fresh table's id — only the weakref referent tells them apart
+    server._run_cache[(id(right), "v")] = stale
+    q = server.submit_join(j, right, strategy="sort_merge")
+    r = server.run()[q]
+    assert r.stats.build_compares > 0      # rebuilt, not aliased
+    clean = db.QueryServer(ks, table, indexes=lidx, batch=1)
+    qc = clean.submit_join(j, right, strategy="sort_merge")
+    want = clean.run()[qc]
+    np.testing.assert_array_equal(r.pairs, want.pairs)
+    assert len(r.pairs) > 0                # the decoy's run had 0 matches
+
+
+def test_run_cache_releases_dead_tables(bfv_engine_ks):
+    """When a transient right table dies, the weakref callback evicts
+    its entry — the server-scope cache cannot accumulate dead runs
+    under an always-on request stream."""
+    import gc
+    ks = bfv_engine_ks
+    table = _table(ks, VALS[:8], name="t_gcrc")
+    lidx = {"v": db.SortedIndex.build(ks, table, "v")}
+    server = db.QueryServer(ks, table, indexes=lidx, batch=1)
+    j = db.Join(None, None, on="v")
+    right = db.Table.from_arrays(ks, "t_gcrc_r", {"v": VALS[:6]},
+                                 jax.random.PRNGKey(8))
+    key = (id(right), "v")
+    server.submit_join(j, right, strategy="sort_merge")
+    server.run()
+    assert key in server._run_cache
+    del right
+    gc.collect()
+    assert key not in server._run_cache
